@@ -1,0 +1,138 @@
+"""Paper Fig. 3 — inference accuracy vs precision format x CORDIC depth.
+
+Trains the paper's MLP workload (196-64-32-32-10, the network the compared
+accelerators run) in float32 on Gaussian-cluster classification, then
+evaluates the SAME weights under each CARMEN execution point. Claims:
+
+  C1: FxP-8 accurate mode stays within ~2% of the FP32 baseline.
+  C2: approximate mode (-33% cycles) costs <2% extra.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.carmen_mlp import CONFIG as MLP
+from repro.core import (
+    FXP8,
+    FXP8_UNIT,
+    FXP16,
+    FXP16_UNIT,
+    FxPFormat,
+    approx_depth,
+    carmen_matmul_fast,
+    full_depth,
+    int8_dot,
+    multi_af_float,
+)
+
+# Per-layer binary-point schedule (classic fixed-point NN deployment): the AF
+# *input* (pre-activation, fan-in up to 196) needs integer headroom, so its
+# 8-bit point is Q3.4; weights/activations stay Q1.6 / Q3.12 as elsewhere.
+AF_IN_8 = FxPFormat(8, 4)
+AF_IN_16 = FxPFormat(16, 10)
+from repro.core.activations import af_ref
+from repro.data.pipeline import ClusterPipeline
+
+
+def _init(rng, sizes):
+    params = []
+    for i, (a, b) in enumerate(zip(sizes[:-1], sizes[1:])):
+        params.append(
+            (rng.normal(0, np.sqrt(2.0 / a), (a, b)).astype(np.float32),
+             np.zeros(b, np.float32))
+        )
+    return params
+
+
+def _forward_f32(params, x):
+    h = x
+    for i, (w, b) in enumerate(params):
+        h = h @ w + b
+        if i < len(params) - 1:
+            h = np.asarray(af_ref(h, MLP.act))
+    return h
+
+
+def _forward_carmen(params, x, fmt, w_fmt, depth):
+    af_fmt = AF_IN_8 if fmt.bits <= 8 else AF_IN_16
+    h = jnp.asarray(x)
+    for i, (w, b) in enumerate(params):
+        h = carmen_matmul_fast(h, jnp.asarray(w), depth, fmt, w_fmt) + b
+        if i < len(params) - 1:
+            h = multi_af_float(h, MLP.act, depth, af_fmt)
+    return np.asarray(h)
+
+
+def _forward_int8(params, x, eff_bits):
+    h = jnp.asarray(x)
+    for i, (w, b) in enumerate(params):
+        h = int8_dot(h, jnp.asarray(w), effective_bits=eff_bits) + b
+        if i < len(params) - 1:
+            h = jnp.asarray(af_ref(h, MLP.act))
+    return np.asarray(h)
+
+
+def _train(params, x, y, steps=2500, lr=0.1, bs=256):
+    params = [(jnp.asarray(w), jnp.asarray(b)) for w, b in params]
+
+    def loss_fn(ps, xb, yb):
+        h = xb
+        for i, (w, b) in enumerate(ps):
+            h = h @ w + b
+            if i < len(ps) - 1:
+                h = af_ref(h, MLP.act)
+        ll = jax.nn.log_softmax(h)
+        return -jnp.take_along_axis(ll, yb[:, None], 1).mean()
+
+    grad = jax.jit(jax.grad(loss_fn))
+    n = x.shape[0]
+    for s in range(steps):
+        i = (s * bs) % (n - bs)
+        g = grad(params, x[i : i + bs], y[i : i + bs])
+        params = [(w - lr * gw, b - lr * gb) for (w, b), (gw, gb) in zip(params, g)]
+    return [(np.asarray(w), np.asarray(b)) for w, b in params]
+
+
+def run():
+    pipe = ClusterPipeline(
+        n_features=MLP.layer_sizes[0], n_classes=MLP.layer_sizes[-1], spread=2.25
+    )
+    data_x, data_y = pipe.dataset(10_000)
+    x_tr, y_tr = data_x[:8_000], data_y[:8_000]
+    x_te, y_te = data_x[8_000:], data_y[8_000:]
+
+    params = _train(_init(np.random.default_rng(0), MLP.layer_sizes), x_tr, y_tr)
+
+    def acc(logits):
+        return float((logits.argmax(-1) == y_te).mean())
+
+    base = acc(_forward_f32(params, x_te))
+    rows = [("fig3.fp32_baseline", 0.0, f"acc={base:.4f}")]
+
+    points = [
+        ("fxp16_accurate", FXP16, FXP16_UNIT, full_depth(FXP16_UNIT)),
+        ("fxp16_approx", FXP16, FXP16_UNIT, approx_depth(FXP16_UNIT)),
+        ("fxp8_accurate", FXP8, FXP8_UNIT, full_depth(FXP8_UNIT)),
+        ("fxp8_approx", FXP8, FXP8_UNIT, approx_depth(FXP8_UNIT)),
+        ("fxp8_d4", FXP8, FXP8_UNIT, 4),
+        ("fxp8_d3", FXP8, FXP8_UNIT, 3),
+        ("fxp8_d2", FXP8, FXP8_UNIT, 2),  # below the useful-depth floor: the cliff
+    ]
+    for name, fmt, w_fmt, depth in points:
+        a = acc(_forward_carmen(params, x_te, fmt, w_fmt, depth))
+        rows.append((f"fig3.{name}", 0.0, f"acc={a:.4f};drop={base-a:+.4f};depth={depth}"))
+
+    for bits in (8, 6, 4):
+        a = acc(_forward_int8(params, x_te, bits))
+        rows.append((f"fig3.int8_eff{bits}", 0.0, f"acc={a:.4f};drop={base-a:+.4f}"))
+
+    # claim checks (printed as derived flags)
+    a8 = [r for r in rows if r[0] == "fig3.fxp8_accurate"][0]
+    a8a = [r for r in rows if r[0] == "fig3.fxp8_approx"][0]
+    d8 = float(a8[2].split("drop=")[1].split(";")[0])
+    d8a = float(a8a[2].split("drop=")[1].split(";")[0])
+    rows.append(("fig3.claim_C1_fxp8_within_2pct", 0.0, f"drop={-d8:.4f};pass={abs(d8) <= 0.02}"))
+    rows.append(("fig3.claim_C2_approx_within_2pct", 0.0, f"extra={d8a - d8:.4f};pass={d8a - d8 <= 0.02}"))
+    return rows

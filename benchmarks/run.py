@@ -1,0 +1,35 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV. Modules:
+  table2_mac      Table II   CORDIC MAC units
+  table3_af       Table III  multi-AF block
+  fig3_accuracy   Fig. 3     accuracy vs precision x depth (claims C1/C2)
+  table4_system   Table IV   engine throughput per execution mode
+  table5_scaling  Table V    PE-lane scaling (claim C4)
+  fig4_layerwise  Fig. 4     VGG-16 precision-aware schedule
+"""
+import sys
+
+
+def main() -> None:
+    from . import (
+        fig3_accuracy,
+        fig4_layerwise,
+        table2_mac,
+        table3_af,
+        table4_system,
+        table5_scaling,
+    )
+
+    modules = [table2_mac, table3_af, fig3_accuracy, table4_system, table5_scaling, fig4_layerwise]
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    print("name,us_per_call,derived")
+    for mod in modules:
+        if only and only not in mod.__name__:
+            continue
+        for name, us, derived in mod.run():
+            print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

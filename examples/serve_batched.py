@@ -1,0 +1,50 @@
+"""Continuous-batching inference under the CARMEN quantized engine.
+
+Serves a batch of requests through the decode engine three times — exact
+(FP32 baseline), carmen (paper-faithful FxP8), int8 (TPU production path) —
+and reports tokens/s plus generation agreement vs the baseline: the
+end-to-end incarnation of the paper's <2% accuracy-loss claim.
+
+Run:  PYTHONPATH=src python examples/serve_batched.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, reduced
+from repro.core import EngineContext, FXP8, FXP16, PrecisionPolicy
+from repro.models import get_model
+from repro.serve.engine import BatchedServer, Request
+
+cfg = reduced(get_config("qwen3-8b"))
+model = get_model(cfg)
+params = model.init(jax.random.PRNGKey(0))
+rng = np.random.default_rng(1)
+requests = [
+    Request(i, rng.integers(0, cfg.vocab_size, 6).astype(np.int32), 12) for i in range(6)
+]
+
+results = {}
+for mode, ctx in (
+    ("exact", EngineContext(mode="exact", compute_dtype=jnp.float32)),
+    ("carmen-fxp16", EngineContext(mode="carmen", policy=PrecisionPolicy.accurate(FXP16),
+                                   compute_dtype=jnp.float32)),
+    ("int8", EngineContext(mode="int8", policy=PrecisionPolicy.accurate(FXP8),
+                           compute_dtype=jnp.float32)),
+):
+    server = BatchedServer(model, ctx, params, slots=3, max_len=32)
+    t0 = time.time()
+    out = server.run([Request(r.rid, r.prompt, r.max_new) for r in requests])
+    dt = time.time() - t0
+    toks = sum(len(v) for v in out.values())
+    results[mode] = out
+    print(f"{mode:13s}: {toks} tokens in {dt:5.1f}s ({toks/dt:6.1f} tok/s)")
+
+base = results["exact"]
+for mode in ("carmen-fxp16", "int8"):
+    agree = np.mean([
+        np.mean(np.array(results[mode][rid]) == np.array(base[rid])) for rid in base
+    ])
+    print(f"token agreement {mode} vs exact: {agree:.1%}")

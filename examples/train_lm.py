@@ -1,0 +1,69 @@
+"""End-to-end LM training driver (example b of the deliverables).
+
+Trains a ~100M-parameter olmo-family model for a few hundred steps on the
+synthetic token pipeline, with checkpointing every 50 steps. On CPU this is
+slow but real; on TPU the same script scales by passing --production-mesh.
+
+Run (quick smoke):   PYTHONPATH=src python examples/train_lm.py --steps 30
+Run (full example):  PYTHONPATH=src python examples/train_lm.py --steps 300
+"""
+import argparse
+import dataclasses
+import sys
+
+from repro.configs import get_config
+from repro.launch import train as train_launcher
+
+
+def hundred_m_config():
+    """olmo-family, ~100M params: 8L x d512 x 8H, vocab 32k."""
+    base = get_config("olmo-1b")
+    return dataclasses.replace(
+        base,
+        num_layers=8,
+        d_model=512,
+        num_heads=8,
+        num_kv_heads=8,
+        head_dim=64,
+        d_ff=2048,
+        vocab_size=32_000,
+        dtype="float32",
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--mode", default="exact")
+    ap.add_argument("--ckpt-dir", default="/tmp/carmen_lm_ckpt")
+    args = ap.parse_args()
+
+    cfg = hundred_m_config()
+    from repro.models import get_model
+
+    print(f"model: {cfg.name}-100m  params={get_model(cfg).count_params()/1e6:.1f}M")
+
+    # reuse the production launcher with our config injected
+    import repro.configs as configs
+
+    configs.ARCHS["olmo-100m"] = cfg
+    sys.argv = [
+        "train",
+        "--arch", "olmo-100m",
+        "--steps", str(args.steps),
+        "--batch", str(args.batch),
+        "--seq", str(args.seq),
+        "--mode", args.mode,
+        "--ckpt-dir", args.ckpt_dir,
+        "--ckpt-every", "50",
+        "--lr", "3e-4",
+    ]
+    losses = train_launcher.main(sys.argv[1:])
+    assert losses[-1] < losses[0], "training must reduce loss"
+    print("OK: loss decreased; checkpoints in", args.ckpt_dir)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,18 @@
+"""The paper's own MLP workload (Table V rows: "196-64-32-32-10").
+
+This is the network the compared CORDIC accelerators (TCAS-I'22 [23],
+ISCAS'25 [5], ICIIS'25 [1]) run; we use it for the fig3 accuracy sweep and
+the table5 scaling benchmark.
+"""
+import dataclasses
+from typing import Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class MLPConfig:
+    name: str = "carmen-mlp-196"
+    layer_sizes: Tuple[int, ...] = (196, 64, 32, 32, 10)
+    act: str = "sigmoid"  # the classic benchmark uses sigmoid hidden units
+
+
+CONFIG = MLPConfig()

@@ -1,0 +1,28 @@
+"""CARMEN core: CORDIC arithmetic, multi-AF block, MAC engine, precision policy."""
+from .fxp import FXP8, FXP8_UNIT, FXP16, FXP16_UNIT, FxPFormat, dequantize, quantize
+from .cordic import (
+    approx_depth,
+    cordic_div,
+    cordic_exp,
+    cordic_mul,
+    full_depth,
+    signed_digit_round,
+)
+from .activations import AF_INDEX, AF_NAMES, af_ref, cordic_softmax, multi_af, multi_af_float
+from .mac import carmen_matmul_fast, cordic_dot, cordic_matmul, mac_cycles
+from .engine import EngineContext, carmen_dot, int8_dot
+from .precision_policy import LayerPrecision, PrecisionPolicy, assign_depths, sensitivity_scan
+from .pooling import aad_pool, aad_pool_1d, avg_pool, max_pool
+from .normalization import layernorm, l2norm, nonparametric_ln, qk_norm, rmsnorm
+
+__all__ = [
+    "FXP8", "FXP8_UNIT", "FXP16", "FXP16_UNIT", "FxPFormat", "dequantize", "quantize",
+    "approx_depth", "cordic_div", "cordic_exp", "cordic_mul", "full_depth",
+    "signed_digit_round",
+    "AF_INDEX", "AF_NAMES", "af_ref", "cordic_softmax", "multi_af", "multi_af_float",
+    "carmen_matmul_fast", "cordic_dot", "cordic_matmul", "mac_cycles",
+    "EngineContext", "carmen_dot", "int8_dot",
+    "LayerPrecision", "PrecisionPolicy", "assign_depths", "sensitivity_scan",
+    "aad_pool", "aad_pool_1d", "avg_pool", "max_pool",
+    "layernorm", "l2norm", "nonparametric_ln", "qk_norm", "rmsnorm",
+]

@@ -1,0 +1,240 @@
+"""CARMEN's time-multiplexed multi-AF block (paper §II-B).
+
+Seven activation functions — ReLU, GELU, Softmax, Tanh, Sigmoid, Swish, SELU —
+computed from **one shared CORDIC datapath**:
+
+* ``exp``  — hyperbolic rotation (cosh + sinh) with ln2 range reduction
+* ``div``  — linear vectoring
+* ``mul``  — linear rotation
+* ReLU and its variants — bypass logic (a compare + select), as in the paper
+
+The silicon block time-multiplexes these sub-units across AF requests; the
+software analogue is that every AF below is a composition of the same three
+primitives, and the Pallas kernel (`kernels/cordic_af`) lowers exactly this
+graph into a single VMEM-resident loop selected by a mode scalar.
+
+Each AF has an exact float reference (``*_ref``) used by tests and by the
+"exact" execution mode of the engine.
+"""
+from __future__ import annotations
+
+import math
+from typing import Callable, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import cordic
+from .fxp import FxPFormat, dequantize, quantize, saturate
+
+__all__ = [
+    "AF_NAMES",
+    "AF_INDEX",
+    "multi_af",
+    "multi_af_float",
+    "af_ref",
+    "cordic_softmax",
+    "softmax_ref",
+]
+
+AF_NAMES = ("relu", "gelu", "tanh", "sigmoid", "swish", "selu", "softmax")
+AF_INDEX = {name: i for i, name in enumerate(AF_NAMES)}
+
+_SELU_ALPHA = 1.6732632423543772
+_SELU_LAMBDA = 1.0507009873554805
+_GELU_C = math.sqrt(2.0 / math.pi)
+
+
+# ---------------------------------------------------------------------------
+# Shared fixed-point sub-blocks (raw int32 in/out)
+# ---------------------------------------------------------------------------
+
+
+def _exp_neg(x_raw, depth: int, fmt: FxPFormat):
+    """exp(x) for x <= 0 (the only exp the AF block needs): result in (0, 1]."""
+    return cordic.cordic_exp(jnp.minimum(x_raw, 0), depth, fmt)
+
+
+def _tanh_raw(x_raw, depth: int, fmt: FxPFormat):
+    """tanh via shared exp + div: t = exp(-2|x|); tanh = (1-t)/(1+t) * sign."""
+    ax = jnp.abs(jnp.asarray(x_raw, jnp.int32))
+    t = _exp_neg(-(ax << 1), depth, fmt)  # exp(-2|x|) in (0, 1]
+    num = fmt.one - t
+    den = fmt.one + t
+    mag = cordic.cordic_div(num, den, depth, fmt)  # ratio <= 1
+    return jnp.where(x_raw >= 0, mag, -mag)
+
+
+def _sigmoid_raw(x_raw, depth: int, fmt: FxPFormat):
+    """sigmoid via shared exp + div, branchless over sign.
+
+    x>=0: 1/(1+e^-x); x<0: e^x/(1+e^x). Both ratios <= 1.
+    """
+    t = _exp_neg(-jnp.abs(jnp.asarray(x_raw, jnp.int32)), depth, fmt)  # e^-|x|
+    den = fmt.one + t
+    num = jnp.where(x_raw >= 0, jnp.int32(fmt.one), t)
+    return cordic.cordic_div(num, den, depth, fmt)
+
+
+def _q1_sat(raw, fmt: FxPFormat):
+    """Saturate a raw value into Q1.frac range (|value| < 2).
+
+    The linear-CORDIC multiplier port converges only for |z| < 2; in silicon
+    the port is physically Q1.f, so wider activations saturate on entry. The
+    AFs below route values through this port only where the saturation is
+    benign (tanh/sigmoid arguments past +-2 are already in their flat region).
+    """
+    lim = (1 << (fmt.frac + 1)) - 1
+    return jnp.clip(jnp.asarray(raw, jnp.int32), -lim, lim)
+
+
+def _mul_raw(a_raw, b_raw, depth: int, fmt: FxPFormat):
+    """Product of two raw values; b is routed through the Q1 multiplier port."""
+    return cordic.cordic_mul(a_raw, _q1_sat(b_raw, fmt), depth, fmt)
+
+
+# ---------------------------------------------------------------------------
+# Fixed-point AFs (raw int32 in ``fmt`` -> raw int32 in ``fmt``)
+# ---------------------------------------------------------------------------
+
+
+def _relu_fx(x, depth, fmt):
+    return jnp.maximum(x, 0)
+
+
+def _tanh_fx(x, depth, fmt):
+    return saturate(_tanh_raw(x, depth, fmt), fmt)
+
+
+def _sigmoid_fx(x, depth, fmt):
+    return saturate(_sigmoid_raw(x, depth, fmt), fmt)
+
+
+def _swish_fx(x, depth, fmt):
+    s = _sigmoid_raw(x, depth, fmt)  # in [0, 1] -> valid Q1 multiplier
+    return saturate(_mul_raw(x, s, depth, fmt), fmt)
+
+
+def _gelu_fx(x, depth, fmt):
+    # tanh-form GELU: 0.5 x (1 + tanh(c (x + 0.044715 x^3))).
+    # The multiplier operand of each CORDIC mul must sit in Q1 range, so the
+    # cubic is factored as x * (c1 * x^2) with c1 absorbing the small constant.
+    c1 = quantize(np.float32(0.044715), fmt)
+    x2 = _mul_raw(x, x, depth, fmt)                      # x^2
+    x2c = _mul_raw(x2, c1, depth, fmt)                   # 0.044715 x^2 (small)
+    x3c = _mul_raw(x, x2c, depth, fmt)                   # 0.044715 x^3
+    inner = x + x3c
+    cg = quantize(np.float32(_GELU_C), fmt)
+    arg = _mul_raw(inner, cg, depth, fmt)
+    t = _tanh_raw(arg, depth, fmt)
+    half = quantize(np.float32(0.5), fmt)
+    out = _mul_raw(x, fmt.one + t, depth, fmt)           # x * (1 + tanh)
+    return saturate(_mul_raw(out, half, depth, fmt), fmt)
+
+
+def _selu_fx(x, depth, fmt):
+    lam = quantize(np.float32(_SELU_LAMBDA), fmt)
+    e = _exp_neg(x, depth, fmt)  # exp(x) for x<=0 branch
+    neg = _mul_raw(e - fmt.one, quantize(np.float32(_SELU_ALPHA), fmt), depth, fmt)
+    pre = jnp.where(x > 0, x, neg)
+    return saturate(_mul_raw(pre, lam, depth, fmt), fmt)
+
+
+_FX_AFS = {
+    "relu": _relu_fx,
+    "gelu": _gelu_fx,
+    "tanh": _tanh_fx,
+    "sigmoid": _sigmoid_fx,
+    "swish": _swish_fx,
+    "selu": _selu_fx,
+}
+
+
+def multi_af(x_raw, mode: str, depth: int, fmt: FxPFormat):
+    """Fixed-point multi-AF block: raw int32 in ``fmt`` -> raw int32 in ``fmt``.
+
+    ``softmax`` needs a reduction axis — use :func:`cordic_softmax` directly.
+    """
+    if mode == "softmax":
+        return cordic_softmax(x_raw, depth, fmt)
+    return _FX_AFS[mode](jnp.asarray(x_raw, jnp.int32), depth, fmt)
+
+
+def cordic_softmax(x_raw, depth: int, fmt: FxPFormat, axis: int = -1):
+    """Softmax = shared exp + accumulate + shared div (paper: "exponentiation
+    and normalization stages").
+
+    Renormalization: when the lane count could overflow the int32 accumulator
+    (sum of N values < 1.0 each needs log2(N) + frac < 31), exponentials are
+    pre-shifted right — a standard hardware wide-accumulator workaround; the
+    quotient is shift-invariant.
+    """
+    x = jnp.asarray(x_raw, jnp.int32)
+    m = jnp.max(x, axis=axis, keepdims=True)
+    e = _exp_neg(x - m, depth, fmt)  # all args <= 0, values in (0, 1]
+    n = x.shape[axis]
+    headroom = int(math.ceil(math.log2(max(n, 2)))) + fmt.frac + 1
+    shift = max(0, headroom - 31)
+    e_s = e >> shift
+    s = jnp.sum(e_s, axis=axis, keepdims=True)
+    # ratio e_s / s <= 1; broadcast div
+    return cordic.cordic_div(e_s, jnp.maximum(s, 1), depth, fmt)
+
+
+def internal_fmt(fmt: FxPFormat) -> FxPFormat:
+    """AF-datapath internal format: I/O width + guard bits.
+
+    The silicon AF block carries guard bits past the I/O width (the CORDIC
+    atanh tables and gain constant need finer resolution than the I/O grid),
+    exactly like the paper's 16-bit-internal SSTp predecessor [4]:
+    FxP8 (Q1.6) computes internally at Q3.12, FxP16 (Q3.12) at Q7.16.
+    The iteration-depth knob scales onto the internal datapath 1:1 per guard
+    bit, so 'full depth' reaches the internal grid and 'approximate depth'
+    keeps the paper's cycle saving.
+    """
+    if fmt.frac >= 16:
+        return fmt
+    if fmt.frac <= 8:
+        return FxPFormat(16, 12)
+    return FxPFormat(24, 16)
+
+
+def multi_af_float(x, mode: str, depth: int, fmt: FxPFormat):
+    """Float-in/float-out wrapper: quantize I/O to ``fmt``, compute with the
+    guard-bit internal datapath, requantize the result back to ``fmt``."""
+    from .fxp import requantize
+
+    xq = quantize(x, fmt)  # I/O quantization at the block boundary
+    ifmt = internal_fmt(fmt)
+    xi = requantize(xq, fmt, ifmt)
+    d = max(depth + (ifmt.frac - fmt.frac), 2)
+    if mode == "softmax":
+        out = cordic_softmax(xi, d, ifmt)
+    else:
+        out = multi_af(xi, mode, d, ifmt)
+    return dequantize(requantize(out, ifmt, fmt), fmt)
+
+
+# ---------------------------------------------------------------------------
+# Exact float references (the FP32 baseline of the paper's Fig. 3)
+# ---------------------------------------------------------------------------
+
+
+def softmax_ref(x, axis: int = -1):
+    return jax.nn.softmax(x, axis=axis)
+
+
+_REFS: Dict[str, Callable] = {
+    "relu": lambda x: jnp.maximum(x, 0.0),
+    "gelu": lambda x: 0.5 * x * (1.0 + jnp.tanh(_GELU_C * (x + 0.044715 * x**3))),
+    "tanh": jnp.tanh,
+    "sigmoid": jax.nn.sigmoid,
+    "swish": lambda x: x * jax.nn.sigmoid(x),
+    "selu": lambda x: _SELU_LAMBDA * jnp.where(x > 0, x, _SELU_ALPHA * (jnp.exp(x) - 1.0)),
+    "softmax": softmax_ref,
+}
+
+
+def af_ref(x, mode: str):
+    return _REFS[mode](jnp.asarray(x, jnp.float32))

@@ -1,0 +1,135 @@
+"""Fixed-point (FxP) number formats and quantization — CARMEN's multi-precision substrate.
+
+CARMEN supports FxP-8 and FxP-16 operands (paper Table I, "Precision: FxP-8/16").
+A format is ``Q<int>.<frac>`` with one sign bit: ``bits = 1 + int_bits + frac``.
+Raw values are carried as int32 regardless of storage width so that CORDIC
+shift-add arithmetic (``core/cordic.py``) has headroom; the *storage* dtype
+(int8/int16) only matters at the memory interface (kernels, checkpoints).
+
+Two quantization regimes coexist in the framework:
+
+* **Binary-point FxP** (this module): scale is a power of two fixed by the
+  format. This is what the silicon datapath uses and what the bit-faithful
+  CORDIC simulation consumes.
+* **Scaled integer quantization** (``repro/quant``): per-tensor/per-channel
+  float scales for production int8 inference on the MXU. The precision policy
+  maps CORDIC depth -> effective mantissa bits for both regimes.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "FxPFormat",
+    "FXP8",
+    "FXP16",
+    "FXP8_UNIT",
+    "FXP16_UNIT",
+    "quantize",
+    "dequantize",
+    "saturate",
+    "requantize",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class FxPFormat:
+    """Signed fixed-point format: ``bits`` total (incl. sign), ``frac`` fractional bits."""
+
+    bits: int
+    frac: int
+
+    def __post_init__(self):
+        if self.frac < 0 or self.frac > self.bits - 1:
+            raise ValueError(f"invalid FxP format Q{self.int_bits}.{self.frac} ({self.bits} bits)")
+
+    @property
+    def int_bits(self) -> int:
+        return self.bits - 1 - self.frac
+
+    @property
+    def scale(self) -> float:
+        """Value of one LSB."""
+        return 2.0 ** (-self.frac)
+
+    @property
+    def one(self) -> int:
+        """Raw representation of +1.0."""
+        return 1 << self.frac
+
+    @property
+    def qmin(self) -> int:
+        return -(1 << (self.bits - 1))
+
+    @property
+    def qmax(self) -> int:
+        return (1 << (self.bits - 1)) - 1
+
+    @property
+    def max_value(self) -> float:
+        return self.qmax * self.scale
+
+    @property
+    def min_value(self) -> float:
+        return self.qmin * self.scale
+
+    @property
+    def storage_dtype(self):
+        if self.bits <= 8:
+            return jnp.int8
+        if self.bits <= 16:
+            return jnp.int16
+        return jnp.int32
+
+    def __str__(self) -> str:  # e.g. "Q1.6"
+        return f"Q{self.int_bits}.{self.frac}"
+
+
+# Activation formats: FxP8 = Q1.6 (range [-2, 2)), FxP16 = Q3.12 (range [-8, 8)).
+FXP8 = FxPFormat(8, 6)
+FXP16 = FxPFormat(16, 12)
+# Weight / multiplier formats: |w| < 2 is required for linear-CORDIC convergence
+# (sum_k 2^-k = 2), so multipliers always use one integer bit.
+FXP8_UNIT = FxPFormat(8, 6)
+FXP16_UNIT = FxPFormat(16, 14)
+
+
+def saturate(raw, fmt: FxPFormat):
+    """Clip raw int32 values into the representable range of ``fmt``."""
+    return jnp.clip(raw, fmt.qmin, fmt.qmax)
+
+
+def quantize(x, fmt: FxPFormat, *, rounding: str = "nearest"):
+    """Float -> raw int32 in ``fmt`` with saturation.
+
+    ``rounding``: "nearest" (round half to even — what jnp.round implements,
+    and the cheapest faithful choice for an RTL round-to-nearest stage) or
+    "floor" (pure truncation, the cheapest silicon option).
+    """
+    scaled = jnp.asarray(x, jnp.float32) * float(1 << fmt.frac)
+    if rounding == "nearest":
+        q = jnp.round(scaled)
+    elif rounding == "floor":
+        q = jnp.floor(scaled)
+    else:
+        raise ValueError(f"unknown rounding {rounding!r}")
+    return saturate(q.astype(jnp.int32), fmt)
+
+
+def dequantize(raw, fmt: FxPFormat):
+    return jnp.asarray(raw, jnp.float32) * np.float32(fmt.scale)
+
+
+def requantize(raw, src: FxPFormat, dst: FxPFormat):
+    """Change binary point (and saturate into the destination format)."""
+    raw = jnp.asarray(raw, jnp.int32)
+    if dst.frac >= src.frac:
+        out = raw << (dst.frac - src.frac)
+    else:
+        sh = src.frac - dst.frac
+        # round-to-nearest on the dropped bits (add half LSB before shifting)
+        out = (raw + (1 << (sh - 1))) >> sh
+    return saturate(out, dst)

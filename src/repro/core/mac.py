@@ -1,0 +1,89 @@
+"""CARMEN's runtime-adaptive iterative CORDIC MAC (paper §II-A).
+
+Two simulation fidelities of the same arithmetic:
+
+* :func:`cordic_dot` / :func:`cordic_matmul` — **bit-faithful**: every product
+  is the linear-rotation shift-add recurrence from ``core/cordic.py``, exactly
+  what the RTL executes. In hardware the accumulator register chains through
+  the K MACs; because linear rotation is additive in ``y``, chaining equals
+  summing the per-product outputs, so the vectorized product-then-sum below is
+  bit-exact to the serial PE. Cost: O(K * depth) fixed-point steps.
+
+* :func:`carmen_matmul_fast` — **error-model**: CORDIC's dominant error is the
+  signed-digit rounding of the multiplier (``signed_digit_round``); applying it
+  to the weight matrix once and then running a real matmul reproduces the
+  bit-faithful result up to shift-truncation noise (bounded, see
+  ``tests/test_cordic_mac.py::test_fast_model_matches_bitexact``). This is the
+  form large-network accuracy sweeps (benchmarks/fig3) use, and the form the
+  Pallas production kernel implements on the MXU.
+
+Cycle model (for the paper's 33%-cycle-reduction claim): one CORDIC iteration
+is one cycle in the iterative PE, so a K-length dot at depth d costs K*d
+cycles (+K accumulate). ``mac_cycles`` exposes this for the benchmarks.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import cordic
+from .fxp import FxPFormat, dequantize, quantize
+
+__all__ = [
+    "cordic_dot",
+    "cordic_matmul",
+    "carmen_matmul_fast",
+    "mac_cycles",
+]
+
+
+def mac_cycles(k: int, depth: int) -> int:
+    """Cycle count of a K-length dot product on one iterative CORDIC PE."""
+    return k * (depth + 1)
+
+
+def cordic_dot(x_raw, w_raw, depth: int, w_fmt: FxPFormat):
+    """Bit-faithful dot product: sum_k cordic_mul(x[k], w[k]).
+
+    x_raw: (..., K) int32 raw activations (any binary point).
+    w_raw: (..., K) int32 raw weights in ``w_fmt`` (Q1.f — |w| < 2).
+    Returns int32 raw in x's binary point (int32 accumulator = the PE's wide
+    accumulator register).
+    """
+    prod = cordic.cordic_mul(x_raw, w_raw, depth, w_fmt)
+    return jnp.sum(prod, axis=-1)
+
+
+def cordic_matmul(x_raw, w_raw, depth: int, w_fmt: FxPFormat):
+    """Bit-faithful fixed-point matmul: (M, K) @ (K, N) -> (M, N) int32 raw.
+
+    Scanned over K so the intermediate is (M, N), not (M, K, N): each scan step
+    is one vector-engine broadcast MAC (all PEs consume activation column k).
+    """
+    x_raw = jnp.asarray(x_raw, jnp.int32)
+    w_raw = jnp.asarray(w_raw, jnp.int32)
+    m, k = x_raw.shape
+    k2, n = w_raw.shape
+    assert k == k2, (x_raw.shape, w_raw.shape)
+
+    def step(acc, xw):
+        xk, wk = xw  # (M,), (N,)
+        p = cordic.cordic_mul(xk[:, None], wk[None, :], depth, w_fmt)
+        return acc + p, None
+
+    acc0 = jnp.zeros((m, n), jnp.int32)
+    acc, _ = jax.lax.scan(step, acc0, (x_raw.T, w_raw))
+    return acc
+
+
+def carmen_matmul_fast(x, w, depth: int, x_fmt: FxPFormat, w_fmt: FxPFormat):
+    """CARMEN error-model matmul on float values (production/TPU form).
+
+    Quantizes activations to ``x_fmt``, weights to the depth-d signed-digit
+    grid of ``w_fmt``, and runs a single real matmul. Float32 carries the int
+    arithmetic exactly (values < 2^24).
+    """
+    xq = dequantize(quantize(x, x_fmt), x_fmt)
+    wq = cordic.signed_digit_round(w, depth, w_fmt)
+    return xq @ wq

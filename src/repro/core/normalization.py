@@ -1,0 +1,52 @@
+"""Normalization unit (paper §II-C).
+
+The accuracy-sensitivity metric pins normalization to the accurate path (it is
+variance-dominated and catastrophically amplifies LSB noise), so the unit
+computes in fp32 regardless of the surrounding FxP precision — mirroring the
+paper's dedicated normalization block sitting outside the quantized MAC array.
+
+Provides every variant the assigned architectures need:
+  rmsnorm            (llama-family, qwen, yi, zamba2, mamba2)
+  layernorm          (seamless, internvl backbone)
+  nonparametric_ln   (olmo-1b: LN without affine params)
+  qk_norm            (qwen3: per-head RMS norm of q/k)
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["rmsnorm", "layernorm", "nonparametric_ln", "qk_norm", "l2norm"]
+
+
+def rmsnorm(x, weight, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jnp.reciprocal(jnp.sqrt(var + eps))
+    return (out * weight.astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm(x, weight, bias, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jnp.reciprocal(jnp.sqrt(var + eps))
+    if weight is not None:
+        out = out * weight.astype(jnp.float32)
+    if bias is not None:
+        out = out + bias.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def nonparametric_ln(x, eps: float = 1e-5):
+    """OLMo-style LayerNorm without affine parameters."""
+    return layernorm(x, None, None, eps)
+
+
+def qk_norm(q, weight, eps: float = 1e-6):
+    """Per-head RMS norm over head_dim (qwen3). q: (..., heads, head_dim)."""
+    return rmsnorm(q, weight, eps)
+
+
+def l2norm(x, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    return (xf * jnp.reciprocal(jnp.sqrt(jnp.sum(xf * xf, -1, keepdims=True) + eps))).astype(x.dtype)

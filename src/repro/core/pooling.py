@@ -1,0 +1,78 @@
+"""AAD (Average-Absolute-Deviation) pooling unit (paper §II-C, ref [14]).
+
+AAD pooling replaces max/average pooling with a robust statistic: within each
+window, elements whose deviation from the window mean is at most the mean
+absolute deviation are averaged; outliers are excluded. Khalil et al. [14]
+report it recovers 0.5-1% accuracy in approximate-arithmetic accelerators
+because quantization outliers no longer dominate the pooled value — which is
+why CARMEN pairs it with the CORDIC MAC.
+
+The "on-the-fly" hardware form streams the window twice (mean pass, select
+pass); functionally identical to the batched form implemented here.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["aad_pool", "aad_pool_1d", "avg_pool", "max_pool"]
+
+
+def _window_reduce(x, window, stride, fn, init):
+    return jax.lax.reduce_window(
+        x, init, fn, (1, window, window, 1), (1, stride, stride, 1), "VALID"
+    )
+
+
+def _patches(x, window: int, stride: int):
+    """(B, H, W, C) -> (B, Ho, Wo, window*window, C) via gather of strided slices."""
+    b, h, w, c = x.shape
+    ho = (h - window) // stride + 1
+    wo = (w - window) // stride + 1
+    idx_h = (jnp.arange(ho) * stride)[:, None] + jnp.arange(window)[None, :]  # (Ho, win)
+    idx_w = (jnp.arange(wo) * stride)[:, None] + jnp.arange(window)[None, :]
+    rows = x[:, idx_h]  # (B, Ho, win, W, C)
+    pat = rows[:, :, :, idx_w]  # (B, Ho, win, Wo, win, C)
+    pat = jnp.moveaxis(pat, 3, 2)  # (B, Ho, Wo, win, win, C)
+    return pat.reshape(b, ho, wo, window * window, c)
+
+
+def aad_pool(x, window: int = 2, stride: int | None = None):
+    """AAD pooling over NHWC feature maps."""
+    stride = stride or window
+    pat = _patches(jnp.asarray(x), window, stride)  # (..., K, C)
+    mean = jnp.mean(pat, axis=-2, keepdims=True)
+    dev = jnp.abs(pat - mean)
+    aad = jnp.mean(dev, axis=-2, keepdims=True)
+    keep = (dev <= aad + 1e-12).astype(pat.dtype)
+    ksum = jnp.sum(keep, axis=-2)
+    out = jnp.sum(pat * keep, axis=-2) / jnp.maximum(ksum, 1.0)
+    # empty-selection fallback (cannot happen for real windows, kept for safety)
+    return jnp.where(ksum > 0, out, jnp.squeeze(mean, -2))
+
+
+def aad_pool_1d(x, window: int, stride: int | None = None):
+    """AAD pooling over (..., T, C) sequences (used by the audio frontend stub)."""
+    stride = stride or window
+    t = x.shape[-2]
+    to = (t - window) // stride + 1
+    idx = (jnp.arange(to) * stride)[:, None] + jnp.arange(window)[None, :]
+    pat = jnp.take(x, idx, axis=-2)  # (..., To, win, C)
+    mean = jnp.mean(pat, axis=-2, keepdims=True)
+    dev = jnp.abs(pat - mean)
+    aad = jnp.mean(dev, axis=-2, keepdims=True)
+    keep = (dev <= aad + 1e-12).astype(pat.dtype)
+    ksum = jnp.sum(keep, axis=-2)
+    out = jnp.sum(pat * keep, axis=-2) / jnp.maximum(ksum, 1.0)
+    return jnp.where(ksum > 0, out, jnp.squeeze(mean, -2))
+
+
+def avg_pool(x, window: int = 2, stride: int | None = None):
+    stride = stride or window
+    s = _window_reduce(jnp.asarray(x, jnp.float32), window, stride, jax.lax.add, 0.0)
+    return s / float(window * window)
+
+
+def max_pool(x, window: int = 2, stride: int | None = None):
+    stride = stride or window
+    return _window_reduce(jnp.asarray(x), window, stride, jax.lax.max, -jnp.inf)

@@ -1,0 +1,94 @@
+"""Deterministic, stateless synthetic data pipeline.
+
+Batches are a pure function of (seed, step, shape): restart/skip-ahead costs
+nothing (fault tolerance), no inter-host coordination is ever needed
+(straggler mitigation — every host computes its own shard of the batch from
+the step index alone), and elastic rescaling just changes the shard slicing.
+
+Two generators:
+* ``TokenPipeline``      — i.i.d.-ish Zipf tokens (markov-mixed so the LM loss
+                           actually decreases) for LM train/serve cells;
+* ``ClusterPipeline``    — Gaussian-cluster classification sets for the
+                           paper's MLP/fig3 accuracy experiments.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class TokenPipeline:
+    cfg: ModelConfig
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+
+    def _key(self, step: int):
+        return jax.random.fold_in(jax.random.PRNGKey(self.seed), step)
+
+    def batch(self, step: int, *, host_index: int = 0, host_count: int = 1) -> Dict:
+        """The full (or this host's shard of the) batch for ``step``."""
+        b = self.global_batch // host_count
+        key = jax.random.fold_in(self._key(step), host_index)
+        k1, k2, k3 = jax.random.split(key, 3)
+        v = self.cfg.vocab_size
+        # zipf-ish marginal via exponential transform of uniforms
+        u = jax.random.uniform(k1, (b, self.seq_len + 1), minval=1e-6)
+        toks = jnp.minimum((jnp.exp(-jnp.log(u) * 0.35) - 1) * 50, v - 1).astype(jnp.int32)
+        # markov mixing: with p=0.5 copy the previous token (learnable structure)
+        copy = jax.random.bernoulli(k2, 0.5, toks.shape)
+        toks = jnp.where(copy, jnp.roll(toks, 1, axis=1), toks)
+        batch = {"tokens": toks[:, :-1], "targets": toks[:, 1:]}
+        if self.cfg.frontend:
+            batch["frontend_embeds"] = (
+                0.02 * jax.random.normal(k3, (b, self.cfg.frontend_tokens, self.cfg.d_model))
+            ).astype(jnp.float32)
+        return batch
+
+
+@dataclasses.dataclass(frozen=True)
+class ClusterPipeline:
+    """Gaussian clusters for the paper's 196-64-32-32-10 MLP experiments."""
+
+    n_features: int = 196
+    n_classes: int = 10
+    seed: int = 0
+    spread: float = 2.2
+
+    def dataset(self, n: int):
+        rng = np.random.default_rng(self.seed)
+        centers = rng.normal(0, self.spread, (self.n_classes, self.n_features))
+        y = rng.integers(0, self.n_classes, n)
+        x = centers[y] + rng.normal(0, 1.0, (n, self.n_features))
+        # normalize into FxP-friendly range [-2, 2)
+        x = np.clip(x / (np.abs(x).max() / 1.9), -1.99, 1.99)
+        return x.astype(np.float32), y.astype(np.int32)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig, *, abstract: bool = True):
+    """ShapeDtypeStruct stand-ins for every model input of a cell (dry-run)."""
+    b, s = shape.global_batch, shape.seq_len
+
+    def sds(shp, dt=jnp.int32):
+        return jax.ShapeDtypeStruct(shp, dt)
+
+    if shape.kind == "train":
+        batch = {"tokens": sds((b, s)), "targets": sds((b, s))}
+    elif shape.kind == "prefill":
+        batch = {"tokens": sds((b, s))}
+    else:  # decode: one new token against a seq_len-deep cache
+        batch = {"tokens": sds((b, 1))}
+    if cfg.frontend and shape.kind != "decode":
+        batch["frontend_embeds"] = sds((b, cfg.frontend_tokens, cfg.d_model), jnp.float32)
+    if cfg.family == "audio" and shape.kind != "decode":
+        # encoder frames (stub frontend): (B, T, d_model)
+        t = int(s * cfg.encdec.encoder_seq_factor)
+        batch["frontend_embeds"] = sds((b, t, cfg.d_model), jnp.float32)
+    return batch

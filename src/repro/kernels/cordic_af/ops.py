@@ -1,0 +1,68 @@
+"""jit'd wrapper for the multi-AF Pallas kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.activations import AF_INDEX
+from repro.core.fxp import FXP8, FxPFormat
+
+from . import kernel as _k
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def _round_up(v: int, m: int) -> int:
+    return ((v + m - 1) // m) * m
+
+
+def multi_af_pallas(
+    x,
+    mode: str | int,
+    *,
+    depth: int,
+    fmt: FxPFormat = FXP8,
+    interpret: bool | None = None,
+):
+    """Apply one of the seven AFs to an arbitrarily-shaped float array.
+
+    ``mode`` may be a name or a runtime int index into
+    ``kernel.ELEMENTWISE_AFS`` (softmax must be named — it routes to the
+    row-reduction kernel and reduces over the last axis).
+    """
+    interpret = _interpret_default() if interpret is None else interpret
+    x = jnp.asarray(x, jnp.float32)
+    shape = x.shape
+
+    if isinstance(mode, str) and mode == "softmax":
+        x2 = x.reshape(-1, shape[-1])
+        m, n = x2.shape
+        bm = 8 if m % 8 == 0 else 1
+        out = _k.af_softmax(x2, depth=depth, fmt=fmt, bm=bm, interpret=interpret)
+        return out.reshape(shape)
+
+    if isinstance(mode, str):
+        mode_idx = _k.ELEMENTWISE_AFS.index(mode)
+    else:
+        mode_idx = mode
+    flat = x.reshape(1, -1) if x.ndim == 1 else x.reshape(-1, shape[-1])
+    m, n = flat.shape
+    bm = min(_k.DEFAULT_BM, _round_up(m, 8))
+    bn = min(_k.DEFAULT_BN, _round_up(n, 128))
+    mp, np_ = _round_up(m, bm), _round_up(n, bn)
+    if (mp, np_) != (m, n):
+        flat = jnp.pad(flat, ((0, mp - m), (0, np_ - n)))
+    out = _k.af_elementwise(flat, mode_idx, depth=depth, fmt=fmt, bm=bm, bn=bn, interpret=interpret)
+    return out[:m, :n].reshape(shape)
+
+
+def af_index(mode: str) -> int:
+    """Runtime mode index for a named AF (elementwise set)."""
+    if mode == "softmax":
+        raise ValueError("softmax routes to the reduction kernel; pass mode='softmax'")
+    return _k.ELEMENTWISE_AFS.index(mode)
+
+
+__all__ = ["multi_af_pallas", "af_index", "AF_INDEX"]

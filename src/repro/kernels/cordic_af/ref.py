@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for the cordic_af kernel: the bit-faithful AF simulation.
+
+The kernel body *is* ``repro.core.activations`` traced into Pallas, so the
+oracle is simply the non-Pallas evaluation of the same functions — any
+difference between kernel and ref is a Pallas lowering bug, not an arithmetic
+disagreement. (The float references used for accuracy budgets live in
+``repro.core.activations.af_ref``.)
+"""
+from __future__ import annotations
+
+from repro.core.activations import multi_af_float
+from repro.core.fxp import FxPFormat
+
+
+def af_ref(x, mode: str, *, depth: int, fmt: FxPFormat):
+    return multi_af_float(x, mode, depth, fmt)

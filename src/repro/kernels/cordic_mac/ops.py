@@ -1,0 +1,105 @@
+"""jit'd wrapper around the cordic_mac Pallas kernel.
+
+Maps CARMEN semantics onto the kernel:
+
+* activations -> binary-point quantization into ``x_fmt`` (saturating), stored
+  int8/int16 — the PE's activation memory bank;
+* weights -> depth-d signed-digit rounding in ``w_fmt`` (the full arithmetic
+  effect of a depth-d linear-CORDIC multiplier), stored int8/int16 — the PE's
+  weight memory bank;
+* kernel -> MXU integer matmul + requant epilogue.
+
+On CPU (this container) the kernel runs in interpret mode; on TPU it compiles
+natively. ``cordic_mac(x, w, depth, ...)`` equals ``carmen_matmul_fast``
+bit-for-bit in the FxP8 path; in the FxP16 path the kernel's integer
+accumulator is *more* exact than the oracle's f32 matmul (products on the
+2^-26 grid), so tests compare at f32-ulp tolerance.
+
+Accumulator envelope (as in silicon — the register is finite): the int32
+accumulator is exact while K * max|x| * max|w| * 2^(frac_x + frac_w) < 2^31.
+FxP8 (frac 6+6): K*|x||w| < 2^19 — never binds. FxP16 (frac 12+14): bounded by
+normalized operands; the production MXU path is int8/FxP8 regardless (v5e has
+no native int16 matmul).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import cordic
+from repro.core.fxp import FXP8, FXP8_UNIT, FxPFormat, quantize
+
+from . import kernel as _k
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def _pad_to(x, rows: int, cols: int):
+    pr, pc = rows - x.shape[0], cols - x.shape[1]
+    if pr or pc:
+        x = jnp.pad(x, ((0, pr), (0, pc)))
+    return x
+
+
+def _round_up(v: int, m: int) -> int:
+    return ((v + m - 1) // m) * m
+
+
+def quantize_weights(w, depth: int, w_fmt: FxPFormat = FXP8_UNIT):
+    """Weight memory bank: signed-digit ints + the (scalar) bank scale."""
+    sd = cordic.signed_digit_round(w, depth, w_fmt)
+    w_q = jnp.round(sd * (1 << w_fmt.frac)).astype(jnp.int32)
+    dtype = jnp.int8 if w_fmt.bits <= 8 else jnp.int16
+    return w_q.astype(dtype), np.float32(w_fmt.scale)
+
+
+def quantize_activations(x, x_fmt: FxPFormat = FXP8):
+    xq = quantize(x, x_fmt)
+    dtype = jnp.int8 if x_fmt.bits <= 8 else jnp.int16
+    return xq.astype(dtype), np.float32(x_fmt.scale)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("depth", "x_fmt", "w_fmt", "fuse_relu", "interpret", "bm", "bn", "bk")
+)
+def cordic_mac(
+    x,
+    w,
+    *,
+    depth: int,
+    x_fmt: FxPFormat = FXP8,
+    w_fmt: FxPFormat = FXP8_UNIT,
+    fuse_relu: bool = False,
+    interpret: bool | None = None,
+    bm: int | None = None,
+    bn: int | None = None,
+    bk: int | None = None,
+):
+    """CARMEN MAC-array matmul: float (M, K) x (K, N) -> float32 (M, N)."""
+    interpret = _interpret_default() if interpret is None else interpret
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2
+
+    x_q, xs = quantize_activations(x, x_fmt)
+    w_q, ws = quantize_weights(w, depth, w_fmt)
+
+    bm = bm or min(_k.DEFAULT_BM, _round_up(m, 8))
+    bn = bn or min(_k.DEFAULT_BN, _round_up(n, 128))
+    bk = bk or min(_k.DEFAULT_BK, _round_up(k, 128))
+    mp, kp, np_ = _round_up(m, bm), _round_up(k, bk), _round_up(n, bn)
+
+    x_q = _pad_to(x_q, mp, kp)
+    w_q = _pad_to(w_q, kp, np_)
+    x_scale = jnp.full((mp, 1), xs, jnp.float32)
+    w_scale = jnp.full((1, np_), ws, jnp.float32)
+
+    out = _k.mac_matmul(
+        x_q, w_q, x_scale, w_scale, bm=bm, bn=bn, bk=bk, fuse_relu=fuse_relu, interpret=interpret
+    )
+    return out[:m, :n]

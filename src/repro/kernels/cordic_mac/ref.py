@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for the cordic_mac kernel.
+
+The kernel computes, exactly:
+
+    out = (x_q.astype(i32) @ w_q.astype(i32)) * x_scale * w_scale   [+ relu]
+
+where x_q is the per-row-scale quantization of x and w_q the depth-d
+signed-digit quantization of w (see ops.py). The oracle reproduces that
+arithmetic with plain jnp ops — integer matmul carried in float32 is exact
+for the value ranges involved (|acc| < 2^22 for K <= 2^8 tiles at int8).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def mac_matmul_ref(x_q, w_q, x_scale, w_scale, *, fuse_relu: bool = False):
+    acc = jnp.dot(
+        x_q.astype(jnp.int32), w_q.astype(jnp.int32), preferred_element_type=jnp.int32
+    )
+    out = acc.astype(jnp.float32) * x_scale * w_scale
+    if fuse_relu:
+        out = jnp.maximum(out, 0.0)
+    return out

@@ -1,0 +1,36 @@
+"""jit'd wrapper: model-layout (B, S, H/KV, D) GQA -> flash kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import kernel as _k
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def flash_attention(q, k, v, *, causal: bool = True, interpret: bool | None = None,
+                    bq: int | None = None, bk: int | None = None):
+    """q: (B, Sq, H, D); k, v: (B, Sk, KV, D) with H % KV == 0.
+
+    Returns (B, Sq, H, D). Scores never materialize in HBM (see kernel.py).
+    """
+    interpret = _interpret_default() if interpret is None else interpret
+    b, sq, h, d = q.shape
+    _, sk, kv, _ = k.shape
+    g = h // kv
+    # broadcast kv heads over groups and fold (B, H) into one grid axis
+    kb = jnp.repeat(k, g, axis=2) if g > 1 else k
+    vb = jnp.repeat(v, g, axis=2) if g > 1 else v
+    qf = q.transpose(0, 2, 1, 3).reshape(b * h, sq, d)
+    kf = kb.transpose(0, 2, 1, 3).reshape(b * h, sk, d)
+    vf = vb.transpose(0, 2, 1, 3).reshape(b * h, sk, d)
+    kwargs = {}
+    if bq:
+        kwargs["bq"] = bq
+    if bk:
+        kwargs["bk"] = bk
+    out = _k.flash_attention_bhsd(qf, kf, vf, causal=causal, interpret=interpret, **kwargs)
+    return out.reshape(b, h, sq, d).transpose(0, 2, 1, 3)

@@ -1,0 +1,31 @@
+"""jit'd wrapper: MLA model quantities -> the shared-latent flash kernel."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from . import kernel as _k
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def mla_flash_attention(q_lat, q_rope, c_kv, k_rope, *, scale: float,
+                        causal: bool = True, interpret: bool | None = None,
+                        **block_kw):
+    """MLA attention with VMEM-broadcast shared latent.
+
+    q_lat: (B, S, H, R); q_rope: (B, S, H, r); c_kv: (B, T, R);
+    k_rope: (B, T, r). ``scale`` is the model's score scale
+    (1/sqrt(nope+rope)). Returns o_lat (B, S, H, R).
+    """
+    interpret = _interpret_default() if interpret is None else interpret
+    q_cat = jnp.concatenate([q_lat, q_rope], axis=-1)
+    # kernel scales by 1/sqrt(Dk); fold the model's scale in via q
+    dk = q_cat.shape[-1]
+    q_cat = q_cat * (math.sqrt(dk) * scale)
+    k_cat = jnp.concatenate([c_kv, k_rope], axis=-1)
+    return _k.mla_flash(q_cat, k_cat, c_kv, causal=causal, interpret=interpret, **block_kw)

@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for the MLA flash kernel: naive shared-latent attention."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def mla_attention_ref(q_cat, k_cat, v, *, causal: bool = True):
+    """q_cat: (B, Sq, H, Dk); k_cat: (B, Sk, Dk); v: (B, Sk, Dv)."""
+    dk = q_cat.shape[-1]
+    s = jnp.einsum(
+        "bqhr,btr->bhqt", q_cat.astype(jnp.float32), k_cat.astype(jnp.float32)
+    ) / math.sqrt(dk)
+    if causal:
+        sq, sk = q_cat.shape[1], k_cat.shape[1]
+        mask = jnp.arange(sq)[:, None] >= jnp.arange(sk)[None, :]
+        s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqt,btr->bqhr", p, v.astype(jnp.float32)).astype(q_cat.dtype)

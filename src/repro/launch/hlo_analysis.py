@@ -1,0 +1,467 @@
+"""Post-SPMD HLO cost analyzer with loop-trip-count correction.
+
+``compiled.cost_analysis()`` counts a ``while`` body ONCE, which under-reports
+every scanned layer stack by ~num_layers x (verified empirically — see
+EXPERIMENTS.md §Roofline methodology). This module parses the optimized HLO
+text and walks the call graph with multipliers:
+
+* fusion / call / custom-call -> x1
+* conditional                  -> max over branches
+* while                        -> trip count (the max s32 literal in the init
+  tuple of the while — jax scans/fori lower to 0..N counters, so the bound is
+  the largest s32 constant; validated against unrolled references in tests)
+
+Per computation it extracts:
+* dot FLOPs        2 * result_elems * contracted_dims   (MXU term)
+* HBM bytes        operand + result bytes of every top-level op in scheduled
+                   computations (fusion-internal ops excluded — they live in
+                   registers/VMEM)
+* collective bytes all-gather / all-reduce / reduce-scatter / all-to-all /
+                   collective-permute result bytes (ICI term)
+
+This is a structural model of the compiled program — the profile source the
+perf loop iterates on (no real TPU in this container).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "c64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
+    "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+COLLECTIVE_OPS = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all", "collective-permute"
+)
+
+_SHAPE_TOKEN = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_DEF_LINE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.+)$")
+_OP_CALL = re.compile(r"([\w\-]+)\(")
+_REGION_REF = re.compile(r"(?:calls|to_apply|condition|body|branch_computations)=\{?%?([\w.\-]+)")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def _first_shapes(text: str) -> List[Tuple[str, str]]:
+    return _SHAPE_TOKEN.findall(text)
+
+
+@dataclasses.dataclass
+class OpInfo:
+    name: str
+    op: str
+    result_bytes: int
+    result_elems: int
+    operands: List[str]
+    line: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: Dict[str, OpInfo]
+    order: List[str]
+    param_shapes: Dict[str, Tuple[str, str]]
+
+
+def _parse_operands(line: str, op: str) -> List[str]:
+    m = re.search(re.escape(op) + r"\(([^)]*)\)", line)
+    if not m:
+        return []
+    names = []
+    for tok in m.group(1).split(","):
+        tok = tok.strip()
+        if tok.startswith("%"):
+            names.append(tok[1:])
+        elif re.match(r"^[\w.\-]+$", tok):
+            names.append(tok)
+    return names
+
+
+def parse_module(hlo: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for raw in hlo.splitlines():
+        line = raw.rstrip()
+        header = re.match(r"^\s*(?:ENTRY\s+)?%?([\w.\-]+)\s*\((.*)\)\s*->.*\{\s*$", line)
+        if header and "=" not in line.split("(")[0]:
+            params = {}
+            for pm in re.finditer(r"([\w.\-]+):\s*([a-z][a-z0-9]*)\[([0-9,]*)\]", header.group(2)):
+                params[pm.group(1)] = (pm.group(2), pm.group(3))
+            cur = Computation(header.group(1), {}, [], params)
+            comps[cur.name] = cur
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        if cur is None:
+            continue
+        dm = _DEF_LINE.match(line)
+        if not dm:
+            continue
+        name, rhs = dm.groups()
+        shapes = _first_shapes(rhs.split("(")[0] + "(")  # result shape(s) before op name
+        rbytes = sum(_shape_bytes(dt, dims) for dt, dims in shapes)
+        relems = sum(
+            int(__import__("numpy").prod([int(d) for d in dims.split(",") if d] or [1]))
+            for dt, dims in shapes
+        )
+        opm = None
+        # op name = token immediately before the first '(' after the shape
+        after_shape = rhs
+        for dt, dims in shapes:
+            after_shape = after_shape.replace(f"{dt}[{dims}]", "", 1)
+        oc = _OP_CALL.search(after_shape)
+        opm = oc.group(1) if oc else "unknown"
+        cur.ops[name] = OpInfo(
+            name, opm, rbytes, relems, _parse_operands(rhs, opm), line.strip()
+        )
+        cur.order.append(name)
+    return comps
+
+
+def _operand_shape(comp: Computation, name: str) -> Optional[Tuple[str, str]]:
+    if name in comp.ops:
+        line = comp.ops[name].line
+        m = _SHAPE_TOKEN.search(line.split("=", 1)[1])
+        return (m.group(1), m.group(2)) if m else None
+    if name in comp.param_shapes:
+        return comp.param_shapes[name]
+    return None
+
+
+def _dot_flops(comp: Computation, op: OpInfo) -> float:
+    """2 * result_elems * prod(contracted dims of lhs)."""
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.line)
+    if not m or not op.operands:
+        return 2.0 * op.result_elems  # degenerate
+    lhs_shape = _operand_shape(comp, op.operands[0])
+    if lhs_shape is None:
+        return 2.0 * op.result_elems
+    dims = [int(d) for d in lhs_shape[1].split(",") if d]
+    k = 1
+    for i in [int(x) for x in m.group(1).split(",") if x]:
+        if i < len(dims):
+            k *= dims[i]
+    return 2.0 * op.result_elems * k
+
+
+def _while_trip(comp: Computation, op: OpInfo, comps: Dict[str, "Computation"]) -> int:
+    """Trip heuristic: jax scans lower to `while i < N` with the bound N as an
+    s32 literal inside the *condition* region (the induction var starts at an
+    s32 0 in the init tuple). Take the max s32 literal in the condition;
+    fall back to init-tuple literals, then 1."""
+    consts: List[int] = []
+    cm = re.search(r"condition=%?([\w.\-]+)", op.line)
+    if cm and cm.group(1) in comps:
+        for o in comps[cm.group(1)].ops.values():
+            m = re.search(r"s32\[\]\s*constant\((\d+)\)", o.line)
+            if m:
+                consts.append(int(m.group(1)))
+    if not consts:
+        def collect(c: Computation, names, depth=0):
+            if depth > 3:
+                return
+            for n in names:
+                if n in c.ops:
+                    o = c.ops[n]
+                    m = re.search(r"s32\[\]\s*constant\((\d+)\)", o.line)
+                    if m:
+                        consts.append(int(m.group(1)))
+                    elif o.op in ("tuple", "copy", "bitcast"):
+                        collect(c, o.operands, depth + 1)
+        collect(comp, op.operands)
+    return max(consts) if consts else 1
+
+
+@dataclasses.dataclass
+class Costs:
+    dot_flops: float = 0.0
+    hbm_bytes: float = 0.0  # fused/TPU model: elementwise chains live in VMEM
+    hbm_bytes_upper: float = 0.0  # literal model: every op materializes
+    collective_bytes: float = 0.0
+    collective_by_kind: Dict[str, float] = dataclasses.field(default_factory=dict)
+    while_trips: List[int] = dataclasses.field(default_factory=list)
+    hbm_by_cat: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+    def cat(self, key: str, b: float):
+        if b:
+            self.hbm_by_cat[key] = self.hbm_by_cat.get(key, 0.0) + b
+
+    def add(self, other: "Costs", mult: float = 1.0):
+        self.dot_flops += other.dot_flops * mult
+        self.hbm_bytes += other.hbm_bytes * mult
+        self.hbm_bytes_upper += other.hbm_bytes_upper * mult
+        self.collective_bytes += other.collective_bytes * mult
+        for k, v in other.collective_by_kind.items():
+            self.collective_by_kind[k] = self.collective_by_kind.get(k, 0.0) + v * mult
+        for k, v in other.hbm_by_cat.items():
+            self.hbm_by_cat[k] = self.hbm_by_cat.get(k, 0.0) + v * mult
+        self.while_trips.extend(other.while_trips)
+
+
+_SKIP_BYTES_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast", "copy",
+    "after-all", "partition-id", "replica-id", "unknown", "iota",
+}
+
+# ops whose results are HBM materialization points even under perfect fusion
+_MATERIALIZE_OPS = {"dot", "reduce", "concatenate", "sort", "reduce-window", "convolution"}
+
+# results at or under this size are assumed VMEM/register-resident when they
+# are produced AND consumed inside the same computation (loop tiles, online-
+# softmax accumulators); larger results spill to HBM. 8 MiB of the 16 MiB v5e
+# VMEM: the XLA flash twin fuses all local (B x H) score tiles into one op
+# (e.g. (2,3,512,512) f32 = 6.3 MB), while the realized Pallas kernel grids
+# over (b, h) and keeps per-program tiles at 1 MiB — the twin's fused buffer
+# is the upper bound of what the kernel pipelines through VMEM.
+VMEM_TILE_BYTES = 8 * 1024 * 1024
+
+
+def _locally_consumed(comp: Computation, op_name: str) -> bool:
+    for o in comp.ops.values():
+        if op_name in o.operands:
+            return True
+    return False
+
+_TRANSPARENT_OPS = {"bitcast", "copy", "convert", "reshape"}
+
+
+def _sliced_operand_bytes(sub_comp: Optional[Computation], index: int, full_bytes: int) -> int:
+    """HBM bytes actually read from a fusion operand.
+
+    When the fused computation consumes parameter ``index`` (possibly through
+    bitcast/copy/convert chains) only via a dynamic-slice (scan reading layer i
+    of a stacked tensor) or as the aliased buffer of a dynamic-update-slice
+    (in-place stacking/cache write), only the slice region moves through HBM —
+    charging the whole stacked operand would overcount by num_layers x trips.
+    """
+    if sub_comp is None:
+        return full_bytes
+    names = list(sub_comp.param_shapes)
+    if index >= len(names):
+        return full_bytes
+    uses: Dict[str, list] = {}
+    for o in sub_comp.ops.values():
+        for opr in o.operands:
+            uses.setdefault(opr, []).append(o)
+    frontier = [names[index]]
+    seen = set(frontier)
+    charge = 0
+    while frontier:
+        n = frontier.pop()
+        for o in uses.get(n, ()):
+            if o.op == "dynamic-slice" and o.operands and o.operands[0] == n:
+                charge = max(charge, o.result_bytes)
+            elif o.op == "dynamic-update-slice" and o.operands and o.operands[0] == n:
+                charge = max(charge, 0)  # aliased buffer; update charged by caller
+            elif o.op in _TRANSPARENT_OPS:
+                if o.name not in seen:
+                    seen.add(o.name)
+                    frontier.append(o.name)
+            else:
+                return full_bytes  # real (non-slice) use -> whole operand read
+    return charge
+
+
+def _fusion_result_bytes(sub_comp: Optional[Computation], result_bytes: int) -> int:
+    """HBM bytes written by a fusion: in-place DUS fusions write only the
+    update region (the surrounding whole-buffer converts are aliasing
+    artifacts on the CPU backend)."""
+    if sub_comp is None:
+        return result_bytes
+    dus = [o for o in sub_comp.ops.values() if o.op == "dynamic-update-slice"]
+    if not dus:
+        return result_bytes
+    upd_bytes = 0
+    for o in dus:
+        sh = _operand_shape(sub_comp, o.operands[1]) if len(o.operands) > 1 else None
+        upd_bytes += _shape_bytes(*sh) if sh else 0
+    return min(result_bytes, 2 * upd_bytes)
+
+
+def _operand_bytes(comp: Computation, op: OpInfo) -> int:
+    return sum(
+        _shape_bytes(*sh) for o in op.operands if (sh := _operand_shape(comp, o)) is not None
+    )
+
+
+def analyze(hlo: str) -> Costs:
+    """Walk the call graph with loop multipliers; see module docstring.
+
+    Byte accounting (both models accumulated in one pass):
+      fused/TPU model (``hbm_bytes``): matmuls/reductions/collectives/slices
+        move bytes; elementwise+convert+broadcast chains are fused into their
+        producers/consumers (each materialized tensor charged write+read via
+        2x result at its materialization point).
+      literal model (``hbm_bytes_upper``): every non-skipped op charges
+        operands + result — what a fusion-free backend would move.
+    """
+    comps = parse_module(hlo)
+    entry = None
+    for line in hlo.splitlines():
+        m = re.match(r"^ENTRY\s+%?([\w.\-]+)", line.strip())
+        if m:
+            entry = m.group(1)
+            break
+    if entry is None:
+        entry = next((n for n in comps if "main" in n), next(iter(comps)))
+
+    memo: Dict[str, Costs] = {}
+
+    def walk(name: str, depth=0) -> Costs:
+        if name in memo:
+            return memo[name]
+        c = Costs()
+        comp = comps.get(name)
+        if comp is None or depth > 24:
+            return c
+        memo[name] = c  # placeholder against cycles
+        for op_name in comp.order:
+            op = comp.ops[op_name]
+            kind = op.op
+            if kind in _SKIP_BYTES_OPS:
+                continue
+            opnd = _operand_bytes(comp, op)
+            if kind == "dot":
+                c.dot_flops += _dot_flops(comp, op)
+                # small tiles produced+consumed locally stay in VMEM; reads of
+                # locally-produced small operands are free for the same reason
+                small_local = (
+                    op.result_bytes <= VMEM_TILE_BYTES and _locally_consumed(comp, op_name)
+                )
+                reads = 0
+                for o in op.operands:
+                    sh = _operand_shape(comp, o)
+                    if sh is None:
+                        continue
+                    b = _shape_bytes(*sh)
+                    if b <= VMEM_TILE_BYTES and o in comp.ops and comp.ops[o].op not in (
+                        "parameter",
+                    ):
+                        continue  # VMEM-resident local tile
+                    reads += b
+                b_ = reads + (0 if small_local else 2 * op.result_bytes)
+                c.hbm_bytes += b_
+                c.cat("dot", b_)
+                c.hbm_bytes_upper += opnd + op.result_bytes
+            elif kind in COLLECTIVE_OPS or any(kind == k + "-start" for k in COLLECTIVE_OPS):
+                base = kind.replace("-start", "")
+                c.collective_bytes += op.result_bytes
+                c.collective_by_kind[base] = (
+                    c.collective_by_kind.get(base, 0.0) + op.result_bytes
+                )
+                c.hbm_bytes += 2 * op.result_bytes
+                c.cat("collective", 2 * op.result_bytes)
+                c.hbm_bytes_upper += 2 * op.result_bytes
+            elif kind == "while":
+                bm = re.search(r"body=%?([\w.\-]+)", op.line)
+                cm = re.search(r"condition=%?([\w.\-]+)", op.line)
+                trip = _while_trip(comp, op, comps)
+                c.while_trips.append(trip)
+                if bm:
+                    c.add(walk(bm.group(1), depth + 1), trip)
+                if cm:
+                    c.add(walk(cm.group(1), depth + 1), trip)
+            elif kind == "conditional":
+                branches = re.findall(
+                    r"(?:true_computation|false_computation|branch_computations=\{[^}]*)"
+                    r"=?%?([\w.\-]+)", op.line)
+                subs = [walk(b, depth + 1) for b in branches if b in comps]
+                if subs:
+                    c.add(max(subs, key=lambda s: s.dot_flops + s.hbm_bytes))
+            elif kind == "dynamic-slice":
+                c.hbm_bytes += 2 * op.result_bytes
+                c.cat("slice", 2 * op.result_bytes)
+                c.hbm_bytes_upper += 2 * op.result_bytes
+            elif kind == "dynamic-update-slice":
+                upd = _operand_shape(comp, op.operands[1]) if len(op.operands) > 1 else None
+                b = 2 * (_shape_bytes(*upd) if upd else 0)
+                c.hbm_bytes += b
+                c.cat("dus", b)
+                c.hbm_bytes_upper += b
+            elif kind == "gather":
+                idx = _operand_shape(comp, op.operands[1]) if len(op.operands) > 1 else None
+                b = 2 * op.result_bytes + (_shape_bytes(*idx) if idx else 0)
+                c.hbm_bytes += b
+                c.cat("gather", b)
+                c.hbm_bytes_upper += b
+            elif kind in ("fusion", "call", "map", "reduce", "sort", "custom-call",
+                          "scatter", "select-and-scatter", "reduce-window"):
+                ref = re.search(r"(?:calls|to_apply)=%?([\w.\-]+)", op.line)
+                sub_comp = comps.get(ref.group(1)) if ref else None
+                sub = walk(ref.group(1), depth + 1) if ref else Costs()
+                # inner dots/collectives always count
+                c.dot_flops += sub.dot_flops
+                c.collective_bytes += sub.collective_bytes
+                for k, v in sub.collective_by_kind.items():
+                    c.collective_by_kind[k] = c.collective_by_kind.get(k, 0.0) + v
+                has_dus = sub_comp is not None and any(
+                    o.op == "dynamic-update-slice" for o in sub_comp.ops.values()
+                )
+                has_ds = sub_comp is not None and any(
+                    o.op == "dynamic-slice" for o in sub_comp.ops.values()
+                )
+                has_mat = (sub.dot_flops > 0) or (
+                    sub_comp is not None
+                    and any(o.op in _MATERIALIZE_OPS for o in sub_comp.ops.values())
+                ) or kind in ("reduce", "sort", "scatter", "custom-call",
+                              "select-and-scatter", "reduce-window")
+                # literal model: full boundary traffic (slice-aware)
+                lit = _fusion_result_bytes(sub_comp, op.result_bytes)
+                for i, o in enumerate(op.operands):
+                    sh = _operand_shape(comp, o)
+                    if sh:
+                        lit += _sliced_operand_bytes(sub_comp, i, _shape_bytes(*sh))
+                c.hbm_bytes_upper += lit
+                # fused model: charge only materialization points; VMEM-tile
+                # rule (as for dots): small results produced+consumed locally
+                # over small local operands form a VMEM-resident pipeline
+                # (flash-attention inner loops) and move no HBM bytes.
+                small_local = (
+                    op.result_bytes <= VMEM_TILE_BYTES
+                    and _locally_consumed(comp, op_name)
+                )
+                reads = 0
+                for i, o in enumerate(op.operands):
+                    sh = _operand_shape(comp, o)
+                    if sh is None:
+                        continue
+                    b = _shape_bytes(*sh)
+                    if b <= VMEM_TILE_BYTES and o in comp.ops and comp.ops[o].op not in (
+                        "parameter",
+                    ):
+                        continue  # locally-produced small tile: VMEM-resident
+                    reads += _sliced_operand_bytes(sub_comp, i, b)
+                if has_dus:
+                    b_ = _fusion_result_bytes(sub_comp, op.result_bytes)
+                    c.hbm_bytes += b_
+                    c.cat("fusion-dus", b_)
+                elif has_ds and not has_mat:
+                    b_ = min(lit, reads + (0 if small_local else 2 * op.result_bytes))
+                    c.hbm_bytes += b_
+                    c.cat("fusion-slice", b_)
+                elif has_mat:
+                    b_ = reads + (0 if small_local else 2 * op.result_bytes)
+                    c.hbm_bytes += b_
+                    c.cat("fusion-mat", b_)
+                # pure elementwise fusion -> fused away (0 bytes in fused model)
+            else:
+                # raw top-level op: elementwise fuses away; others materialize
+                c.hbm_bytes_upper += opnd + op.result_bytes
+                if kind in _MATERIALIZE_OPS:
+                    c.hbm_bytes += opnd + 2 * op.result_bytes
+                    c.cat("raw-mat", opnd + 2 * op.result_bytes)
+        return c
+
+    return walk(entry)

@@ -1,0 +1,20 @@
+"""Production mesh construction (spec'd shapes: 16x16 single-pod, 2x16x16 multi-pod).
+
+A FUNCTION, not a module-level constant, so importing this module never touches
+jax device state (the dry-run must set XLA_FLAGS before first jax init).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Whatever devices exist locally (tests / examples): 1 device -> 1x1 mesh."""
+    n = len(jax.devices())
+    return jax.make_mesh((n, 1), ("data", "model"))

@@ -1,0 +1,46 @@
+"""Refresh dry-run artifacts from their dumped HLO (analyzer iterations are
+offline — no recompilation needed). Usage:
+    PYTHONPATH=src python -m repro.launch.reanalyze [--dir artifacts/dryrun]
+"""
+import argparse
+import glob
+import gzip
+import json
+import os
+
+from repro.launch import hlo_analysis
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    default_dir = os.path.join(os.path.dirname(__file__), "..", "..", "..", "artifacts", "dryrun")
+    ap.add_argument("--dir", default=default_dir)
+    args = ap.parse_args()
+    for path in sorted(glob.glob(os.path.join(args.dir, "*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        if rec.get("status") != "ok":
+            continue
+        stem = os.path.basename(path)[:-5]
+        hlo_path = os.path.join(args.dir, "hlo", stem + ".hlo.gz")
+        if not os.path.exists(hlo_path):
+            print(f"[miss] {stem}: no HLO dump")
+            continue
+        with gzip.open(hlo_path, "rt") as f:
+            costs = hlo_analysis.analyze(f.read())
+        rec.update(
+            flops_dev=costs.dot_flops,
+            hbm_bytes_dev=costs.hbm_bytes,
+            hbm_bytes_upper_dev=costs.hbm_bytes_upper,
+            coll_bytes_dev=costs.collective_bytes,
+            coll_by_kind={k: float(v) for k, v in costs.collective_by_kind.items()},
+            while_trips=costs.while_trips[:64],
+        )
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+        print(f"[ok] {stem}: flops {costs.dot_flops:.3e} hbm {costs.hbm_bytes/1e9:.0f}GB "
+              f"coll {costs.collective_bytes/1e9:.1f}GB")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,159 @@
+"""Roofline report: three terms per (arch x shape x mesh) from dry-run artifacts.
+
+    compute term    = flops_dev / peak_FLOPs_per_chip          [s]
+    memory term     = hbm_bytes_dev / HBM_bw                   [s]
+    collective term = coll_bytes_dev / link_bw                 [s]
+
+flops_dev / hbm_bytes_dev / coll_bytes_dev come from the loop-corrected
+analyzer over the post-SPMD (per-device) HLO — see hlo_analysis.py. The
+collective term conservatively charges all traffic to ONE ICI link
+(~50 GB/s); multi-link overlap is an optimization recorded in §Perf.
+
+MODEL_FLOPS = 6*N_active*D (train) or 2*N_active*D (prefill) or 2*N_active*B
+(decode) — the "useful compute" yardstick; HLO/MODEL ratio exposes
+remat/redundancy waste.
+
+Usage: python -m repro.launch.roofline [--dir artifacts/dryrun] [--mesh single]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+from repro.configs import SHAPES, get_config
+from repro.models import get_model
+from repro.models import params as P_
+
+PEAK_FLOPS = 197e12  # bf16 / chip (TPU v5e)
+HBM_BW = 819e9  # B/s / chip
+LINK_BW = 50e9  # B/s / link
+CHIPS = {"single": 256, "multi": 512}
+
+
+def routed_expert_params(cfg) -> int:
+    if not cfg.moe:
+        return 0
+    m = cfg.moe
+    n_moe_layers = (cfg.num_layers - m.first_dense_layers) // m.moe_every
+    return n_moe_layers * m.num_experts * 3 * cfg.d_model * m.d_ff_expert
+
+
+def active_params(cfg) -> int:
+    """Params touched per token: total - embedding-table lookups - inactive experts."""
+    total = get_model(cfg).count_params()
+    embed = cfg.vocab_size * cfg.d_model  # lookup, not matmul
+    routed = routed_expert_params(cfg)
+    active_routed = routed * (cfg.moe.top_k / cfg.moe.num_experts) if cfg.moe else 0
+    return int(total - embed - routed + active_routed)
+
+
+def model_flops(cfg, shape) -> float:
+    n = active_params(cfg)
+    if shape.kind == "train":
+        return 6.0 * n * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.global_batch * shape.seq_len
+    return 2.0 * n * shape.global_batch  # decode: one token per row
+
+
+def attn_flops(cfg, shape) -> float:
+    """Quadratic attention score+value flops (reported alongside, not in 6ND)."""
+    if not cfg.num_heads:
+        return 0.0
+    d_attn = cfg.num_heads * cfg.head_dim
+    b, s = shape.global_batch, shape.seq_len
+    layers = cfg.num_layers
+    if shape.kind == "train":
+        return 3 * 4.0 * b * s * s * d_attn * layers / 2  # causal half, fwd+bwd
+    if shape.kind == "prefill":
+        return 4.0 * b * s * s * d_attn * layers / 2
+    return 4.0 * b * s * d_attn * layers  # decode: 1 x S per layer
+
+
+def load_records(art_dir: str, mesh: Optional[str] = None, mode: str = "exact", tag: str = ""):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(art_dir, "*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        if mesh and r.get("mesh") != mesh:
+            continue
+        if r.get("mode", "exact") != mode or r.get("tag", "") != tag:
+            continue
+        recs.append(r)
+    return recs
+
+
+def terms(rec: Dict) -> Dict:
+    cfg = get_config(rec["arch"])
+    shape = SHAPES[rec["shape"]]
+    chips = CHIPS[rec["mesh"]]
+    t_c = rec["flops_dev"] / PEAK_FLOPS
+    t_m = rec["hbm_bytes_dev"] / HBM_BW
+    t_x = rec["coll_bytes_dev"] / LINK_BW
+    dom = max(("compute", t_c), ("memory", t_m), ("collective", t_x), key=lambda kv: kv[1])
+    mf = model_flops(cfg, shape)
+    hlo_global = rec["flops_dev"] * chips
+    return {
+        "compute_s": t_c,
+        "memory_s": t_m,
+        "collective_s": t_x,
+        "bottleneck": dom[0],
+        "step_s": dom[1],
+        "model_flops": mf,
+        "attn_flops": attn_flops(cfg, shape),
+        "hlo_flops_global": hlo_global,
+        "useful_ratio": mf / hlo_global if hlo_global else 0.0,
+        "roofline_frac": (mf / chips / PEAK_FLOPS) / dom[1] if dom[1] else 0.0,
+    }
+
+
+def render(recs: List[Dict]) -> str:
+    hdr = (
+        "| arch | shape | mesh | compute s | memory s | collective s | bottleneck | "
+        "MODEL TF | useful (6ND/HLO) | roofline frac |\n"
+        "|---|---|---|---|---|---|---|---|---|---|\n"
+    )
+    rows = []
+    for r in recs:
+        if r["status"] == "skip":
+            rows.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | — | — | — | SKIP: {r['reason'][:40]} | | | |"
+            )
+            continue
+        if r["status"] != "ok":
+            rows.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | — | — | — | FAIL: {r.get('error','')[:40]} | | | |"
+            )
+            continue
+        t = terms(r)
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {t['compute_s']:.3f} | {t['memory_s']:.3f} | {t['collective_s']:.3f} "
+            f"| **{t['bottleneck']}** | {t['model_flops']/1e12:.1f} "
+            f"| {t['useful_ratio']:.2f} | {t['roofline_frac']:.3f} |"
+        )
+    return hdr + "\n".join(rows) + "\n"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    default_dir = os.path.join(os.path.dirname(__file__), "..", "..", "..", "artifacts", "dryrun")
+    ap.add_argument("--dir", default=default_dir)
+    ap.add_argument("--mesh", default=None)
+    ap.add_argument("--mode", default="exact")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    recs = load_records(args.dir, args.mesh, args.mode, args.tag)
+    md = render(recs)
+    print(md)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(md)
+
+
+if __name__ == "__main__":
+    main()

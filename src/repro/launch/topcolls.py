@@ -1,0 +1,45 @@
+"""Print the largest collective ops (trip-weighted) in a dumped cell HLO."""
+import gzip
+import re
+import sys
+
+from repro.launch import hlo_analysis as H
+
+
+def top_collectives(hlo: str, n: int = 10):
+    comps = H.parse_module(hlo)
+    entry = next(
+        m.group(1) for line in hlo.splitlines()
+        if (m := re.match(r"^ENTRY\s+%?([\w.\-]+)", line.strip()))
+    )
+    colls = []
+
+    def walk(name, mult=1.0, depth=0):
+        comp = comps.get(name)
+        if comp is None or depth > 24:
+            return
+        for op in comp.ops.values():
+            kind = op.op
+            if kind == "while":
+                bm = re.search(r"body=%?([\w.\-]+)", op.line)
+                trip = H._while_trip(comp, op, comps)
+                if bm:
+                    walk(bm.group(1), mult * trip, depth + 1)
+            elif kind in ("fusion", "call", "reduce", "custom-call", "scatter", "sort", "map"):
+                ref = re.search(r"(?:calls|to_apply)=%?([\w.\-]+)", op.line)
+                if ref:
+                    walk(ref.group(1), mult, depth + 1)
+            elif any(kind == k or kind == k + "-start" for k in H.COLLECTIVE_OPS):
+                colls.append((op.result_bytes * mult, kind, op.line[:120]))
+
+    walk(entry)
+    colls.sort(reverse=True)
+    return colls[:n], sum(c[0] for c in colls)
+
+
+if __name__ == "__main__":
+    with gzip.open(sys.argv[1], "rt") as f:
+        top, total = top_collectives(f.read(), int(sys.argv[2]) if len(sys.argv) > 2 else 10)
+    print(f"total {total/1e9:.0f} GB")
+    for b, kind, line in top:
+        print(f"  {b/1e9:8.1f} GB {kind:16s} {line[:100]}")

@@ -1,0 +1,207 @@
+"""Mamba2 / SSD mixer (arXiv:2405.21060, state-space duality).
+
+Chunked SSD forward for train/prefill: within-chunk quadratic ("attention-like")
+term + across-chunk linear recurrence carried by ``lax.scan`` — O(L) in sequence
+length, which is what qualifies the ssm/hybrid archs for the long_500k cell.
+Single-step recurrent form for decode.
+
+Arch-applicability note (DESIGN.md §4): the SSD *recurrence* is elementwise
+state decay, not a MAC-array workload, so the CORDIC-MAC technique applies to
+the in/out projections (routed through EngineContext) while the recurrence
+itself stays in bf16/f32.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import EngineContext
+from repro.core.normalization import rmsnorm
+
+from .params import ParamSpec
+
+
+def _dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    n_heads = s.num_heads or d_inner // s.head_dim
+    return d_inner, n_heads
+
+
+def mamba2_specs(cfg: ModelConfig):
+    s = cfg.ssm
+    d = cfg.d_model
+    d_inner, n_heads = _dims(cfg)
+    conv_dim = d_inner + 2 * s.n_groups * s.state_dim
+    proj_out = 2 * d_inner + 2 * s.n_groups * s.state_dim + n_heads  # z, x, B, C, dt
+    return {
+        "in_proj": ParamSpec((d, proj_out), ("embed", "ssm_inner")),
+        "conv_w": ParamSpec((s.conv_width, conv_dim), ("conv", "ssm_inner")),
+        "conv_b": ParamSpec((conv_dim,), ("ssm_inner",), "zeros"),
+        "A_log": ParamSpec((n_heads,), ("ssm_heads",), "zeros"),
+        "D": ParamSpec((n_heads,), ("ssm_heads",), "ones"),
+        "dt_bias": ParamSpec((n_heads,), ("ssm_heads",), "zeros"),
+        "norm": ParamSpec((d_inner,), ("ssm_inner",), "ones"),
+        "out_proj": ParamSpec((d_inner, d), ("ssm_inner", "embed")),
+    }
+
+
+def _split_proj(cfg: ModelConfig, zxbcdt):
+    s = cfg.ssm
+    d_inner, n_heads = _dims(cfg)
+    gn = s.n_groups * s.state_dim
+    z = zxbcdt[..., :d_inner]
+    x = zxbcdt[..., d_inner : 2 * d_inner]
+    b_mat = zxbcdt[..., 2 * d_inner : 2 * d_inner + gn]
+    c_mat = zxbcdt[..., 2 * d_inner + gn : 2 * d_inner + 2 * gn]
+    dt = zxbcdt[..., 2 * d_inner + 2 * gn :]
+    return z, x, b_mat, c_mat, dt
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv: x (B, L, C), w (W, C). Returns (B, L, C)."""
+    width = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    out = sum(xp[:, i : i + x.shape[1], :] * w[i][None, None, :] for i in range(width))
+    return out + b[None, None, :]
+
+
+def _segsum(dA):
+    """Lower-triangular pairwise decay sums: out[..., i, j] = sum dA[j+1..i]."""
+    q = dA.shape[-1]
+    cs = jnp.cumsum(dA, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]  # sum (j, i]
+    mask = jnp.tril(jnp.ones((q, q), bool), 0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x, dt, a, b_mat, c_mat, chunk: int):
+    """SSD scan. x: (B,L,H,P), dt: (B,L,H), a: (H,) (negative),
+    b_mat/c_mat: (B,L,G,N) with H a multiple of G. Returns (y, final_state)."""
+    bsz, l, h, p = x.shape
+    g, n = b_mat.shape[-2:]
+    assert l % chunk == 0, (l, chunk)
+    nc = l // chunk
+    rep = h // g
+
+    # chunked views
+    xc = x.reshape(bsz, nc, chunk, h, p)
+    dtc = dt.reshape(bsz, nc, chunk, h)
+    bc = jnp.repeat(b_mat.reshape(bsz, nc, chunk, g, n), rep, axis=3)  # (B,NC,Q,H,N)
+    cc = jnp.repeat(c_mat.reshape(bsz, nc, chunk, g, n), rep, axis=3)
+
+    dA = dtc * a[None, None, None, :]  # (B,NC,Q,H) negative decay increments
+    dA_cs = jnp.cumsum(dA, axis=2)
+    dA_total = dA_cs[:, :, -1:, :]  # (B,NC,1,H)
+    xdt = xc * dtc[..., None]
+
+    # 1) intra-chunk (quadratic within the chunk)
+    L = jnp.exp(_segsum(jnp.moveaxis(dA, 3, 2)))  # (B,NC,H,Q,Q) causal decay mask
+    scores = jnp.einsum("bcqhn,bckhn->bchqk", cc, bc) * L
+    y_diag = jnp.einsum("bchqk,bckhp->bcqhp", scores, xdt)
+
+    # 2) per-chunk terminal states
+    decay_states = jnp.exp(dA_total - dA_cs)  # (B,NC,Q,H)
+    states = jnp.einsum("bcqhn,bcqhp->bchnp", bc * decay_states[..., None], xdt)
+
+    # 3) inter-chunk recurrence (scan over chunks)
+    chunk_decay = jnp.exp(dA_total[:, :, 0, :])  # (B,NC,H)
+
+    def scan_fn(carry, inp):
+        st, dec = inp  # (B,H,N,P), (B,H)
+        new = carry * dec[..., None, None] + st
+        return new, carry  # emit state *entering* the chunk
+
+    init = jnp.zeros((bsz, h, n, p), x.dtype)
+    final_state, prev_states = jax.lax.scan(
+        scan_fn, init, (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0))
+    )
+    prev_states = jnp.moveaxis(prev_states, 0, 1)  # (B,NC,H,N,P)
+
+    # 4) inter-chunk contribution
+    state_decay = jnp.exp(dA_cs)  # (B,NC,Q,H)
+    y_off = jnp.einsum("bcqhn,bchnp->bcqhp", cc * state_decay[..., None], prev_states)
+
+    y = (y_diag + y_off).reshape(bsz, l, h, p)
+    return y, final_state
+
+
+def mamba2_forward(p, x, cfg: ModelConfig, ctx: EngineContext, *, name, state=None):
+    """Full-sequence (state=None) or single-step decode (state carried).
+
+    state = {"conv": (B, W-1, conv_dim), "ssm": (B, H, N, P)}.
+    Returns (out, new_state).
+    """
+    s = cfg.ssm
+    d_inner, n_heads = _dims(cfg)
+    bsz, l, _ = x.shape
+
+    zxbcdt = ctx.linear(x, p["in_proj"], name=f"{name}.in_proj")
+    z, xs, b_mat, c_mat, dt = _split_proj(cfg, zxbcdt)
+    conv_in = jnp.concatenate([xs, b_mat, c_mat], axis=-1)
+
+    if state is None:
+        conv_out = _causal_conv(conv_in, p["conv_w"], p["conv_b"])
+        new_conv = None
+    else:
+        window = jnp.concatenate([state["conv"], conv_in], axis=1)  # (B, W, C)
+        conv_out = (
+            jnp.einsum("bwc,wc->bc", window, p["conv_w"])[:, None, :] + p["conv_b"][None, None, :]
+        )
+        new_conv = window[:, 1:, :]
+
+    conv_out = jax.nn.silu(conv_out)
+    xs = conv_out[..., :d_inner]
+    b_mat = conv_out[..., d_inner : d_inner + s.n_groups * s.state_dim]
+    c_mat = conv_out[..., d_inner + s.n_groups * s.state_dim :]
+
+    a = -jnp.exp(p["A_log"].astype(jnp.float32))  # (H,)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"][None, None, :])  # (B,L,H)
+    xh = xs.reshape(bsz, l, n_heads, s.head_dim)
+    bm = b_mat.reshape(bsz, l, s.n_groups, s.state_dim).astype(jnp.float32)
+    cm = c_mat.reshape(bsz, l, s.n_groups, s.state_dim).astype(jnp.float32)
+
+    if state is None:
+        chunk = min(s.chunk_size, l)
+        y, final_state = ssd_chunked(xh.astype(jnp.float32), dt, a, bm, cm, chunk)
+        # conv window for a subsequent decode step = last W-1 pre-conv inputs
+        tail = conv_in[:, -(s.conv_width - 1) :, :].astype(x.dtype)
+        new_state = {"conv": tail, "ssm": final_state}
+    else:
+        # recurrent step: h' = h * exp(dt A) + dt * B x ; y = C h' + D x
+        rep = n_heads // s.n_groups
+        bmh = jnp.repeat(bm[:, 0], rep, axis=1)  # (B,H,N)
+        cmh = jnp.repeat(cm[:, 0], rep, axis=1)
+        dt0 = dt[:, 0]  # (B,H)
+        decay = jnp.exp(dt0 * a[None, :])  # (B,H)
+        xdt = xh[:, 0].astype(jnp.float32) * dt0[..., None]  # (B,H,P)
+        upd = jnp.einsum("bhn,bhp->bhnp", bmh, xdt)
+        ssm = state["ssm"].astype(jnp.float32) * decay[..., None, None] + upd
+        y = jnp.einsum("bhn,bhnp->bhp", cmh, ssm)[:, None]  # (B,1,H,P)
+        new_state = {"conv": new_conv, "ssm": ssm.astype(state["ssm"].dtype)}
+
+    y = y + p["D"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(bsz, l, d_inner).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype), p["norm"])
+    return ctx.linear(y, p["out_proj"], name=f"{name}.out_proj"), new_state
+
+
+def init_mamba_state(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16):
+    s = cfg.ssm
+    d_inner, n_heads = _dims(cfg)
+    conv_dim = d_inner + 2 * s.n_groups * s.state_dim
+    return {
+        "conv": jnp.zeros((batch, s.conv_width - 1, conv_dim), dtype),
+        "ssm": jnp.zeros((batch, n_heads, s.state_dim, s.head_dim), dtype),
+    }
+
+
+def mamba_state_specs(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16):
+    s = cfg.ssm
+    d_inner, n_heads = _dims(cfg)
+    conv_dim = d_inner + 2 * s.n_groups * s.state_dim
+    return {
+        "conv": jax.ShapeDtypeStruct((batch, s.conv_width - 1, conv_dim), dtype),
+        "ssm": jax.ShapeDtypeStruct((batch, n_heads, s.state_dim, s.head_dim), dtype),
+    }

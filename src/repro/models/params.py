@@ -1,0 +1,83 @@
+"""Parameter specs with logical sharding axes.
+
+Every model declares its parameters as a pytree of :class:`ParamSpec` —
+shape + logical axis names + init scale. The same tree serves three uses:
+
+* ``init(specs, key)``       — materialize real (small) params for smoke tests
+  and examples;
+* ``abstract(specs)``        — ShapeDtypeStructs for the dry-run (no memory);
+* ``partition_specs(specs)`` — PartitionSpecs via the logical-axis rules in
+  ``repro/sharding/partition.py``.
+
+Logical axis vocabulary (see sharding rules): "vocab", "embed", "heads",
+"kv_heads", "head_dim", "mlp", "experts", "layers", "q_lora", "kv_lora",
+"ssm_inner", "ssm_state", "ssm_heads", "conv", "groups", None (replicated).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    init: str = "normal"  # normal | zeros | ones | small_normal
+    scale: float = 0.02
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def tree_map_specs(fn, specs):
+    return jax.tree.map(fn, specs, is_leaf=is_spec)
+
+
+def abstract(specs, dtype=jnp.bfloat16):
+    """ShapeDtypeStruct tree — the dry-run's zero-memory stand-in."""
+    return tree_map_specs(lambda s: jax.ShapeDtypeStruct(s.shape, dtype), specs)
+
+
+def axes_tree(specs):
+    return tree_map_specs(lambda s: s.axes, specs)
+
+
+def init(specs, key, dtype=jnp.float32):
+    """Materialize parameters (smoke tests / examples / real training)."""
+    leaves, treedef = jax.tree.flatten(specs, is_leaf=is_spec)
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for k, s in zip(keys, leaves):
+        if s.init == "zeros":
+            out.append(jnp.zeros(s.shape, dtype))
+        elif s.init == "ones":
+            out.append(jnp.ones(s.shape, dtype))
+        else:
+            scale = s.scale
+            if s.init == "small_normal":
+                scale = s.scale / math.sqrt(max(s.shape[0], 1))
+            out.append(scale * jax.random.normal(k, s.shape, dtype))
+    return jax.tree.unflatten(treedef, out)
+
+
+def count_params(specs) -> int:
+    leaves = jax.tree.leaves(specs, is_leaf=is_spec)
+    return int(sum(np.prod(s.shape) for s in leaves))
+
+
+def stack_layers(spec_fn, n: int):
+    """Stack one layer's specs along a leading 'layers' axis (scan form)."""
+    layer = spec_fn()
+    return tree_map_specs(
+        lambda s: ParamSpec((n,) + s.shape, ("layers",) + s.axes, s.init, s.scale), layer
+    )

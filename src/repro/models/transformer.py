@@ -1,0 +1,341 @@
+"""Decoder-only LM covering the dense / moe / vlm / hybrid / ssm families.
+
+Design constraints that shaped this file:
+
+* **HLO is O(1) in depth**: every repeated layer stack is a ``lax.scan`` over
+  stacked parameters (stacked leading 'layers' axis). MoE models with a dense
+  prefix (deepseek) or interleaving (llama4) scan each homogeneous segment.
+* **one code path for train / prefill / decode**: segments take an optional
+  cache pytree (stacked along layers, consumed as scan xs, emitted as ys).
+* **CARMEN everywhere**: all projections go through ``EngineContext``; MLP
+  activations go through the multi-AF block mapping.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import EngineContext
+
+from repro.sharding.partition import constrain
+
+from . import blocks, mamba2, mla
+from .params import ParamSpec, stack_layers
+
+
+# ---------------------------------------------------------------------------
+# Layer specs per family
+# ---------------------------------------------------------------------------
+
+
+def _attn_specs(cfg: ModelConfig):
+    return mla.mla_specs(cfg) if cfg.mla else blocks.attention_specs(cfg)
+
+
+def _dense_layer_specs(cfg: ModelConfig, d_ff: Optional[int] = None):
+    return {
+        "attn_norm": blocks.norm_spec(cfg),
+        "attn": _attn_specs(cfg),
+        "mlp_norm": blocks.norm_spec(cfg),
+        "mlp": blocks.mlp_specs(cfg, d_ff),
+    }
+
+
+def _moe_layer_specs(cfg: ModelConfig):
+    return {
+        "attn_norm": blocks.norm_spec(cfg),
+        "attn": _attn_specs(cfg),
+        "mlp_norm": blocks.norm_spec(cfg),
+        "moe": blocks.moe_specs(cfg),
+    }
+
+
+def _mamba_layer_specs(cfg: ModelConfig):
+    return {"norm": blocks.norm_spec(cfg), "mixer": mamba2.mamba2_specs(cfg)}
+
+
+def _segments(cfg: ModelConfig):
+    """(kind, layer_count) segments; layer params stack within a segment."""
+    if cfg.family in ("dense", "vlm"):
+        return [("dense", cfg.num_layers)]
+    if cfg.family == "moe":
+        m = cfg.moe
+        segs = []
+        if m.first_dense_layers:
+            segs.append(("dense_prefix", m.first_dense_layers))
+        rest = cfg.num_layers - m.first_dense_layers
+        if m.moe_every == 1:
+            segs.append(("moe", rest))
+        else:
+            assert rest % m.moe_every == 0
+            segs.append(("pair", rest // m.moe_every))
+        return segs
+    if cfg.family == "ssm":
+        return [("mamba", cfg.num_layers)]
+    if cfg.family == "hybrid":
+        per = cfg.hybrid.attn_every
+        assert cfg.num_layers % per == 0, (cfg.num_layers, per)
+        return [("hybrid", cfg.num_layers // per)]  # groups of (per mamba + shared attn)
+    raise ValueError(cfg.family)
+
+
+def decoder_specs(cfg: ModelConfig):
+    specs: Dict[str, Any] = {
+        "embed": ParamSpec((cfg.vocab_size, cfg.d_model), ("vocab", "embed")),
+        "final_norm": blocks.norm_spec(cfg),
+    }
+    if not cfg.tie_embeddings:
+        specs["lm_head"] = ParamSpec((cfg.d_model, cfg.vocab_size), ("embed", "vocab"))
+    for i, (kind, n) in enumerate(_segments(cfg)):
+        key = f"seg{i}_{kind}"
+        if kind == "dense":
+            specs[key] = stack_layers(lambda: _dense_layer_specs(cfg), n)
+        elif kind == "dense_prefix":
+            specs[key] = stack_layers(lambda: _dense_layer_specs(cfg, cfg.moe.d_ff_dense), n)
+        elif kind == "moe":
+            specs[key] = stack_layers(lambda: _moe_layer_specs(cfg), n)
+        elif kind == "pair":
+            specs[key] = stack_layers(
+                lambda: {
+                    "dense": _dense_layer_specs(cfg, cfg.moe.d_ff_dense),
+                    "moe": _moe_layer_specs(cfg),
+                },
+                n,
+            )
+        elif kind == "mamba":
+            specs[key] = stack_layers(lambda: _mamba_layer_specs(cfg), n)
+        elif kind == "hybrid":
+            per = cfg.hybrid.attn_every
+            specs[key] = stack_layers(
+                lambda: stack_layers(lambda: _mamba_layer_specs(cfg), per), n
+            )
+            specs["shared_attn"] = {
+                "attn_norm": blocks.norm_spec(cfg),
+                "attn": blocks.attention_specs(cfg),
+                "mlp_norm": blocks.norm_spec(cfg),
+                "mlp": blocks.mlp_specs(cfg),
+            }
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# Layer bodies
+# ---------------------------------------------------------------------------
+
+
+def _attn_block(p, h, cfg, ctx, positions, cache, name):
+    h = constrain(h, "batch", None, None)
+    x = blocks.apply_norm(p["attn_norm"], h, cfg)
+    if cfg.mla:
+        out, new_cache = mla.mla_attention(
+            p["attn"], x, cfg, ctx, positions=positions, name=name, cache=cache
+        )
+    else:
+        out, new_cache = blocks.attention(
+            p["attn"], x, cfg, ctx, positions=positions, name=name, cache=cache
+        )
+    return h + out, new_cache
+
+
+def _dense_layer(p, h, cfg, ctx, positions, cache, name="layer"):
+    h, new_cache = _attn_block(p, h, cfg, ctx, positions, cache, f"{name}.attn")
+    x = blocks.apply_norm(p["mlp_norm"], h, cfg)
+    h = h + blocks.mlp(p["mlp"], x, cfg, ctx, name=f"{name}.mlp")
+    return h, new_cache, {}
+
+
+def _moe_layer(p, h, cfg, ctx, positions, cache, name="layer"):
+    h, new_cache = _attn_block(p, h, cfg, ctx, positions, cache, f"{name}.attn")
+    x = blocks.apply_norm(p["mlp_norm"], h, cfg)
+    out, aux = blocks.moe_ffn(p["moe"], x, cfg, ctx, name=f"{name}.moe")
+    return h + out, new_cache, aux
+
+
+def _mamba_layer(p, h, cfg, ctx, state, name="layer"):
+    h = constrain(h, "batch", None, None)
+    x = blocks.apply_norm(p["norm"], h, cfg)
+    out, new_state = mamba2.mamba2_forward(p["mixer"], x, cfg, ctx, name=f"{name}.mixer", state=state)
+    return h + out, new_state
+
+
+# ---------------------------------------------------------------------------
+# Segment runners (scan over stacked layer params [+ caches])
+# ---------------------------------------------------------------------------
+
+
+def _scan_segment(layer_fn, stacked_params, h, caches, *, remat: bool):
+    body = layer_fn
+    if remat:
+        body = jax.checkpoint(layer_fn, prevent_cse=False)
+
+    def scan_fn(h, xs):
+        p, cache = xs
+        h, new_cache, aux = body(p, h, cache)
+        return h, (new_cache, aux)
+
+    h, (new_caches, auxs) = jax.lax.scan(scan_fn, h, (stacked_params, caches))
+    return h, new_caches, auxs
+
+
+def _run_segments(params, h, cfg, ctx, positions, caches, *, remat: bool):
+    """caches: dict seg_key -> stacked cache (or None). Returns h, caches, aux."""
+    new_caches = {}
+    lb_loss = jnp.zeros((), jnp.float32)
+    for i, (kind, n) in enumerate(_segments(cfg)):
+        key = f"seg{i}_{kind}"
+        seg_cache = caches.get(key) if caches else None
+        if kind in ("dense", "dense_prefix"):
+            fn = lambda p, h, c: _dense_layer(p, h, cfg, ctx, positions, c)
+            h, nc, _ = _scan_segment(fn, params[key], h, seg_cache, remat=remat)
+            new_caches[key] = nc
+        elif kind == "moe":
+            fn = lambda p, h, c: _moe_layer(p, h, cfg, ctx, positions, c)
+            h, nc, aux = _scan_segment(fn, params[key], h, seg_cache, remat=remat)
+            lb_loss = lb_loss + jnp.sum(aux.get("lb_loss", jnp.zeros((n,))))
+            new_caches[key] = nc
+        elif kind == "pair":
+
+            def pair_fn(p, h, c):
+                c_d, c_m = (c or {}).get("dense"), (c or {}).get("moe")
+                h, nc_d, _ = _dense_layer(p["dense"], h, cfg, ctx, positions, c_d)
+                h, nc_m, aux = _moe_layer(p["moe"], h, cfg, ctx, positions, c_m)
+                return h, {"dense": nc_d, "moe": nc_m}, aux
+
+            h, nc, aux = _scan_segment(pair_fn, params[key], h, seg_cache, remat=remat)
+            lb_loss = lb_loss + jnp.sum(aux.get("lb_loss", jnp.zeros((n,))))
+            new_caches[key] = nc
+        elif kind == "mamba":
+
+            def mamba_fn(p, h, c):
+                h, ns = _mamba_layer(p, h, cfg, ctx, c)
+                return h, ns, {}
+
+            h, nc, _ = _scan_segment(mamba_fn, params[key], h, seg_cache, remat=remat)
+            new_caches[key] = nc
+        elif kind == "hybrid":
+            shared = params["shared_attn"]
+
+            def group_fn(p, h, c):
+                c_ssm = (c or {}).get("ssm"), (c or {}).get("attn")
+
+                def inner(h, xs):
+                    pl, cl = xs
+                    h, ns = _mamba_layer(pl, h, cfg, ctx, cl)
+                    return h, ns
+
+                h, new_ssm = jax.lax.scan(inner, h, (p, c_ssm[0]))
+                h, new_attn = _attn_block(
+                    shared, h, cfg, ctx, positions, c_ssm[1], "shared.attn"
+                )
+                x = blocks.apply_norm(shared["mlp_norm"], h, cfg)
+                h = h + blocks.mlp(shared["mlp"], x, cfg, ctx, name="shared.mlp")
+                return h, {"ssm": new_ssm, "attn": new_attn}, {}
+
+            h, nc, _ = _scan_segment(group_fn, params[key], h, seg_cache, remat=remat)
+            new_caches[key] = nc
+    return h, new_caches, {"lb_loss": lb_loss}
+
+
+# ---------------------------------------------------------------------------
+# Cache construction
+# ---------------------------------------------------------------------------
+
+
+def _seg_cache(cfg, kind, n, batch, max_len, dtype, abstract: bool):
+    def attn_c():
+        if cfg.mla:
+            f = mla.mla_cache_specs if abstract else mla.init_mla_cache
+        else:
+            f = blocks.attn_cache_specs if abstract else blocks.init_attn_cache
+        return f(cfg, batch, max_len, dtype)
+
+    def mamba_c():
+        f = mamba2.mamba_state_specs if abstract else mamba2.init_mamba_state
+        return f(cfg, batch, dtype)
+
+    def stack(tree, m):
+        if abstract:
+            return jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct((m,) + s.shape, s.dtype), tree
+            )
+        return jax.tree.map(lambda a: jnp.broadcast_to(a, (m,) + a.shape).copy(), tree)
+
+    if kind in ("dense", "dense_prefix", "moe"):
+        return stack(attn_c(), n)
+    if kind == "pair":
+        return stack({"dense": attn_c(), "moe": attn_c()}, n)
+    if kind == "mamba":
+        return stack(mamba_c(), n)
+    if kind == "hybrid":
+        per = cfg.hybrid.attn_every
+        return stack({"ssm": stack(mamba_c(), per), "attn": attn_c()}, n)
+    raise ValueError(kind)
+
+
+def make_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16, abstract=False):
+    return {
+        f"seg{i}_{kind}": _seg_cache(cfg, kind, n, batch, max_len, dtype, abstract)
+        for i, (kind, n) in enumerate(_segments(cfg))
+    }
+
+
+# ---------------------------------------------------------------------------
+# Public model API
+# ---------------------------------------------------------------------------
+
+
+def forward(params, batch, cfg: ModelConfig, ctx: EngineContext, *, remat: bool = False):
+    """Train/prefill forward: batch['tokens'] (B, S) -> logits (B, S(+P), V).
+
+    VLM/audio-lm families prepend batch['frontend_embeds'] (B, P, D) stub
+    embeddings; logits cover the full concatenated sequence.
+    """
+    tokens = batch["tokens"]
+    h = jnp.take(params["embed"], tokens, axis=0).astype(cfg.compute_dtype)
+    h = constrain(h, "batch", None, None)
+    if cfg.frontend == "vision":
+        fe = batch["frontend_embeds"].astype(cfg.compute_dtype)
+        h = jnp.concatenate([fe, h], axis=1)
+    s = h.shape[1]
+    positions = jnp.arange(s)
+    h, _, aux = _run_segments(params, h, cfg, ctx, positions, None, remat=remat)
+    h = constrain(h, "batch", None, None)
+    h = blocks.apply_norm(params["final_norm"], h, cfg)
+    logits = constrain(_lm_head(params, h, cfg, ctx), "batch", None, "model")
+    return logits, aux
+
+
+def _lm_head(params, h, cfg, ctx):
+    if cfg.tie_embeddings:
+        w = params["embed"].T
+    else:
+        w = params["lm_head"]
+    return ctx.linear(h, w, name="lm_head").astype(jnp.float32)
+
+
+def decode_step(params, tokens, cache, cfg: ModelConfig, ctx: EngineContext):
+    """One-token decode: tokens (B, 1) + cache -> (logits (B, 1, V), cache)."""
+    h = jnp.take(params["embed"], tokens, axis=0).astype(cfg.compute_dtype)
+    h = constrain(h, "batch", None, None)
+    index = _cache_index(cache)  # (B,) per-row decode positions
+    positions = index[:, None]  # (B, 1) — rope broadcasts per row
+    h, new_caches, _ = _run_segments(params, h, cfg, ctx, positions, cache, remat=False)
+    h = blocks.apply_norm(params["final_norm"], h, cfg)
+    logits = _lm_head(params, h, cfg, ctx)
+    return logits, new_caches
+
+
+def _cache_index(cache):
+    """Per-row decode positions: attn caches carry a stacked (L, B) index; all
+    layers advance in lockstep so layer 0's row is authoritative. SSM-only
+    models have no index (positions are unused by the mixer) -> zeros."""
+    for v in jax.tree.leaves(cache):
+        if hasattr(v, "dtype") and v.dtype == jnp.int32 and v.ndim >= 2:
+            return v[0]  # (B,)
+    # ssm-only: derive batch from any state leaf
+    some = jax.tree.leaves(cache)[0]
+    return jnp.zeros((some.shape[1],), jnp.int32)

@@ -1,0 +1,88 @@
+"""Scaled-integer quantization substrate (the production int8 regime).
+
+Complements ``core/fxp.py`` (binary-point FxP — the silicon datapath regime):
+here scales are per-tensor/per-channel floats, weights are stored int8 once
+(serving), and the CORDIC depth knob maps to effective weight bits
+(``core.engine.int8_dot``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def fake_quant(x, bits: int = 8, axis: Optional[int] = None):
+    """Symmetric fake-quantization with straight-through gradient."""
+    qmax = 2.0 ** (bits - 1) - 1
+    if axis is None:
+        scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-8) / qmax
+    else:
+        scale = jnp.maximum(
+            jnp.max(jnp.abs(x), axis=axis, keepdims=True), 1e-8
+        ) / qmax
+    q = jnp.clip(jnp.round(x / scale), -qmax, qmax) * scale
+    return x + jax.lax.stop_gradient(q - x)  # STE
+
+
+def quantize_params_int8(params, *, per_channel: bool = True):
+    """One-time weight-bank quantization for serving: int8 leaves + scales.
+
+    2D+ float leaves are quantized per output channel (last dim); small/1D
+    leaves (norms, biases) stay float (criticality-pinned, like routers).
+    """
+
+    def one(p):
+        if not hasattr(p, "dtype") or p.dtype.kind != "f" or p.ndim < 2:
+            return {"qvalue": p, "qscale": None}
+        axes = tuple(range(p.ndim - 1)) if per_channel else None
+        amax = jnp.max(jnp.abs(p.astype(jnp.float32)), axis=axes, keepdims=True)
+        scale = jnp.maximum(amax, 1e-8) / 127.0
+        q = jnp.clip(jnp.round(p.astype(jnp.float32) / scale), -127, 127).astype(jnp.int8)
+        return {"qvalue": q, "qscale": scale.astype(jnp.float32)}
+
+    return jax.tree.map(one, params)
+
+
+def dequantize_params(qparams):
+    def one(leaf):
+        if leaf["qscale"] is None:
+            return leaf["qvalue"]
+        return leaf["qvalue"].astype(jnp.float32) * leaf["qscale"]
+
+    return jax.tree.map(
+        one, qparams, is_leaf=lambda x: isinstance(x, dict) and "qvalue" in x
+    )
+
+
+def calibrate_activation_scales(apply_fn, params, batches, taps) -> Dict[str, float]:
+    """Max-abs activation calibration over a few batches (static scales)."""
+    scales = {t: 0.0 for t in taps}
+    for batch in batches:
+        acts = apply_fn(params, batch)  # dict tap -> activation
+        for t in taps:
+            scales[t] = max(scales[t], float(jnp.max(jnp.abs(acts[t]))))
+    return {t: v / 127.0 for t, v in scales.items()}
+
+
+@dataclasses.dataclass
+class QuantizedLinear:
+    """Pre-quantized weight bank + int8 dot (serving fast path)."""
+
+    w_q: jax.Array  # int8 (in, out)
+    scale: jax.Array  # (1, out)
+
+    @staticmethod
+    def from_float(w):
+        amax = jnp.max(jnp.abs(w.astype(jnp.float32)), axis=0, keepdims=True)
+        scale = jnp.maximum(amax, 1e-8) / 127.0
+        w_q = jnp.clip(jnp.round(w.astype(jnp.float32) / scale), -127, 127).astype(jnp.int8)
+        return QuantizedLinear(w_q, scale)
+
+    def __call__(self, x, *, effective_bits: int = 8):
+        from repro.core.engine import int8_dot
+
+        return int8_dot(x, self.w_q, effective_bits=effective_bits, w_scale=self.scale)

@@ -1,0 +1,122 @@
+"""Serving engine: prefill/decode step builders, sampling, batched scheduler.
+
+The decode step is the unit the decode-shape cells lower (one new token against
+a seq_len-deep KV cache). The scheduler below implements simple continuous
+batching over a fixed slot count — enough to drive the end-to-end serving
+example honestly (admit/evict per step, per-slot positions), while the
+distributed story (cache shardings) lives in sharding/partition.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core import EngineContext
+from repro.models import ModelApi
+
+
+def make_prefill_step(model: ModelApi, ctx: EngineContext):
+    def prefill_step(params, batch):
+        logits, _ = model.forward(params, batch, ctx)
+        return logits
+
+    return prefill_step
+
+
+def make_decode_step(model: ModelApi, ctx: EngineContext):
+    def decode_step(params, tokens, cache):
+        return model.decode_step(params, tokens, cache, ctx)
+
+    return decode_step
+
+
+def sample(logits, key, *, temperature: float = 0.0):
+    """logits (B, 1, V) -> tokens (B, 1)."""
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    scaled = logits.astype(jnp.float32) / temperature
+    return jax.random.categorical(key, scaled, axis=-1).astype(jnp.int32)
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray  # (P,) int32
+    max_new: int
+    generated: Optional[List[int]] = None
+
+
+@dataclasses.dataclass
+class BatchedServer:
+    """Continuous batching over ``slots`` concurrent sequences (greedy)."""
+
+    model: ModelApi
+    ctx: EngineContext
+    params: object
+    slots: int = 4
+    max_len: int = 256
+
+    def __post_init__(self):
+        self.decode = jax.jit(make_decode_step(self.model, self.ctx))
+        self.cache = self.model.make_cache(self.slots, self.max_len, dtype=jnp.float32)
+        self.active: Dict[int, Request] = {}
+
+    def _reset_slot(self, slot: int):
+        """Zero this slot's per-row cache index: stale entries become invalid
+        (masked by index) and get overwritten as the new request fills in."""
+
+        def fix(v):
+            if hasattr(v, "dtype") and v.dtype == jnp.int32 and v.ndim >= 2:
+                return v.at[..., slot].set(0)
+            return v
+
+        self.cache = jax.tree.map(fix, self.cache)
+
+    def _prefill_slot(self, slot: int, req: Request):
+        """Feed prompt tokens through the decode path into this slot's cache.
+
+        (Token-by-token teacher forcing — a dedicated batched prefill kernel is
+        a serving optimization, same math.)
+        """
+        self._reset_slot(slot)
+        tok = None
+        for t in req.prompt:
+            toks = np.zeros((self.slots, 1), np.int32)
+            toks[slot, 0] = t
+            logits, self.cache = self.decode(self.params, jnp.asarray(toks), self.cache)
+            tok = int(np.asarray(logits[slot, 0]).argmax())
+        req.generated = [tok]
+
+    def run(self, requests: List[Request]) -> Dict[int, List[int]]:
+        """Serve requests to completion; returns rid -> generated tokens."""
+        queue = list(requests)
+        results: Dict[int, List[int]] = {}
+        slot_of: Dict[int, int] = {}
+        free = list(range(self.slots))
+        while queue or self.active:
+            while queue and free:
+                req = queue.pop(0)
+                slot = free.pop(0)
+                self._prefill_slot(slot, req)
+                self.active[req.rid] = req
+                slot_of[req.rid] = slot
+            toks = np.zeros((self.slots, 1), np.int32)
+            for rid, req in self.active.items():
+                toks[slot_of[rid], 0] = req.generated[-1]
+            logits, self.cache = self.decode(self.params, jnp.asarray(toks), self.cache)
+            done = []
+            for rid, req in self.active.items():
+                nxt = int(np.asarray(logits[slot_of[rid], 0]).argmax())
+                req.generated.append(nxt)
+                if len(req.generated) >= req.max_new:
+                    done.append(rid)
+            for rid in done:
+                req = self.active.pop(rid)
+                results[rid] = req.generated
+                free.append(slot_of.pop(rid))
+        return results

@@ -1,0 +1,220 @@
+"""Logical-axis sharding rules -> NamedSharding, divisibility-aware.
+
+The paper's N-PE vector engine scales by adding lanes; on the TPU cluster the
+lane axis is the ``model`` mesh axis (TP/EP) and throughput scaling comes from
+``(pod, data)`` (DP/FSDP). Rules map logical parameter axes to mesh axes; a
+rule only applies when the dimension divides the mesh-axis extent — otherwise
+the dimension falls back to replication (recorded by ``sharding_report`` so
+the roofline pass can see what was dropped; e.g. 40-head attention on a
+16-way model axis replicates heads and relies on FSDP for weight memory).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# logical axis -> ordered candidate mesh-axis groups (first that divides wins)
+PARAM_RULES: Dict[str, Tuple[Tuple[str, ...], ...]] = {
+    "vocab": (("model",),),
+    "embed": (("pod", "data"), ("data",), ("pod",)),  # FSDP shard of the d_model dim
+    "heads": (("model",),),
+    "kv_heads": (("model",),),
+    "head_dim": (),
+    "mlp": (("model",),),
+    # model-axis EP. (2D EP over data x model — fully-local expert weights —
+    # was tried and REFUTED: GSPMD replicates the token batch to feed the
+    # expert shards, 14x more collective bytes; see EXPERIMENTS.md §Perf B.)
+    "experts": (("model",),),
+    "layers": (),
+    "q_lora": (),
+    "kv_lora": (),
+    "ssm_inner": (("model",),),
+    "ssm_heads": (("model",),),
+    "ssm_state": (),
+    "conv": (),
+    "groups": (),
+    "frames": (),
+    None: (),
+}
+
+# activation/batch rules used by input and cache shardings
+BATCH_AXES = ("pod", "data")
+
+
+def _resolve(axis_name: Optional[str], dim: int, mesh: Mesh, report: list) -> Optional[Tuple[str, ...]]:
+    for group in PARAM_RULES.get(axis_name, ()):  # ordered preference
+        group = tuple(a for a in group if a in mesh.axis_names)
+        if not group:
+            continue
+        extent = int(np.prod([mesh.shape[a] for a in group]))
+        if dim % extent == 0:
+            return group
+        report.append((axis_name, dim, group, extent))
+    return None
+
+
+def param_pspec(spec, mesh: Mesh, report: Optional[list] = None) -> P:
+    report = report if report is not None else []
+    entries, used = [], set()
+    for dim, ax in zip(spec.shape, spec.axes):
+        group = _resolve(ax, dim, mesh, report)
+        if group and not (set(group) & used):
+            entries.append(group if len(group) > 1 else group[0])
+            used.update(group)
+        else:
+            entries.append(None)
+    while entries and entries[-1] is None:
+        entries.pop()
+    return P(*entries)
+
+
+def param_shardings(specs, mesh: Mesh):
+    """Pytree of NamedShardings matching a model's param specs."""
+    from repro.models import params as P_  # local: avoids circular import
+
+    report: list = []
+    out = P_.tree_map_specs(lambda s: NamedSharding(mesh, param_pspec(s, mesh, report)), specs)
+    return out, report
+
+
+def sharding_report(specs, mesh: Mesh):
+    """(logical_axis, dim, group, extent) tuples for every replication fallback."""
+    _, report = param_shardings(specs, mesh)
+    return report
+
+
+def batch_pspec(mesh: Mesh, *, extra: Sequence[Optional[str]] = ()) -> P:
+    axes = tuple(a for a in BATCH_AXES if a in mesh.axis_names)
+    return P(axes, *extra)
+
+
+def batch_sharding(mesh: Mesh, *, extra: Sequence[Optional[str]] = ()) -> NamedSharding:
+    return NamedSharding(mesh, batch_pspec(mesh, extra=extra))
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())
+
+
+def current_mesh_axes() -> Tuple[str, ...]:
+    """Axis names of the ambient mesh (jax.set_mesh or `with mesh:`), or ()."""
+    try:
+        am = jax.sharding.get_abstract_mesh()
+        if am is not None and not am.empty:
+            return tuple(am.axis_names)
+    except Exception:
+        pass
+    try:
+        from jax._src import mesh as mesh_lib
+
+        m = mesh_lib.thread_resources.env.physical_mesh
+        if not m.empty:
+            return tuple(m.axis_names)
+    except Exception:
+        pass
+    return ()
+
+
+def constrain(x, *entries):
+    """with_sharding_constraint against the ambient mesh; no-op without one.
+
+    Entries: "batch" (-> all of pod/data present in the mesh), a mesh axis
+    name, or None. Dims that don't divide their axis extent are left
+    unconstrained. Model code calls this to pin activation layouts (GSPMD
+    propagation otherwise drops the batch sharding after the vocab-sharded
+    embedding gather — observed: a TP-only program doing 32x redundant work;
+    see EXPERIMENTS.md §Dry-run).
+    """
+    axes = current_mesh_axes()
+    if not axes:
+        return x
+    from jax._src import mesh as mesh_lib
+
+    try:
+        phys = mesh_lib.thread_resources.env.physical_mesh
+        sizes = dict(zip(phys.axis_names, phys.devices.shape)) if not phys.empty else {}
+    except Exception:
+        sizes = {}
+    spec = []
+    used: set = set()
+    for i, e in enumerate(entries):
+        if e == "batch":
+            group = tuple(a for a in BATCH_AXES if a in axes and a not in used)
+            extent = int(np.prod([sizes.get(a, 1) for a in group])) if group else 1
+            if group and x.shape[i] % extent == 0:
+                spec.append(group)
+                used.update(group)
+            else:
+                spec.append(None)
+        elif isinstance(e, tuple):
+            group = tuple(a for a in e if a in axes and a not in used)
+            extent = int(np.prod([sizes.get(a, 1) for a in group])) if group else 1
+            if group and x.shape[i] % extent == 0:
+                spec.append(group)
+                used.update(group)
+            else:
+                spec.append(None)
+        elif e in axes and e not in used and x.shape[i] % sizes.get(e, 1) == 0:
+            spec.append(e)
+            used.add(e)
+        else:
+            spec.append(None)
+    if all(s is None for s in spec):
+        return x
+    return jax.lax.with_sharding_constraint(x, P(*spec))
+
+
+def mesh_axis_sizes() -> Dict[str, int]:
+    try:
+        from jax._src import mesh as mesh_lib
+
+        m = mesh_lib.thread_resources.env.physical_mesh
+        if not m.empty:
+            return dict(zip(m.axis_names, m.devices.shape))
+    except Exception:
+        pass
+    return {}
+
+
+def use_2d_ep(num_experts: int) -> bool:
+    """True when experts divide the full (data x model) extent — weights are
+    then fully local (matches the 'experts' param rule preference)."""
+    sizes = mesh_axis_sizes()
+    extent = sizes.get("data", 1) * sizes.get("model", 1)
+    return extent > 1 and num_experts % extent == 0
+
+
+def cache_shardings(cache_tree, mesh: Mesh, cfg):
+    """KV caches: batch over (pod, data); kv_heads/model-dim over model when divisible.
+
+    Cache layouts (see models/*): attn (L, B, S, KV, hd) | mla latent
+    (L, B, S, R) | ssm conv (L, B, W, C) / state (L, B, H, N, P).
+    """
+    batch_axes = tuple(a for a in BATCH_AXES if a in mesh.axis_names)
+    batch_extent = int(np.prod([mesh.shape[a] for a in batch_axes])) if batch_axes else 1
+    model_extent = mesh.shape.get("model", 1)
+
+    def one(leaf):
+        shape = leaf.shape
+        if len(shape) <= 1:  # stacked index scalars
+            return NamedSharding(mesh, P())
+        entries: list = [None] * len(shape)
+        if shape[1] % max(batch_extent, 1) == 0:
+            entries[1] = batch_axes  # B dim (dim 0 is layers)
+        # shard the largest trailing dim over model when divisible
+        best = None
+        for i in range(2, len(shape)):
+            if shape[i] % model_extent == 0 and shape[i] >= model_extent:
+                if best is None or shape[i] > shape[best]:
+                    best = i
+        if best is not None:
+            entries[best] = "model"
+        while entries and entries[-1] is None:
+            entries.pop()
+        return NamedSharding(mesh, P(*entries))
+
+    return jax.tree.map(one, cache_tree)

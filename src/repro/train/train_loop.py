@@ -1,0 +1,99 @@
+"""Training step construction: loss, microbatching, remat, CARMEN modes.
+
+``make_train_step`` returns the pure function the launcher jits (and the
+dry-run lowers). Distribution is entirely in the in/out shardings + GSPMD;
+the step itself is mesh-agnostic.
+
+Fault-tolerance posture (DESIGN.md §6): the step is deterministic given
+(params, opt_state, batch, step) — combined with the stateless data pipeline
+(batch derived from the step index) a restarted worker replays identically,
+and checkpoint/restore (train/checkpoint.py) carries the rest.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import EngineContext
+from repro.models import ModelApi
+
+from . import optimizer as opt
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    optimizer: opt.AdamWConfig = dataclasses.field(default_factory=opt.AdamWConfig)
+    microbatches: int = 1  # gradient accumulation steps inside one train_step
+    remat: bool = True
+    lb_loss_weight: float = 0.01  # MoE load-balance aux
+    z_loss_weight: float = 1e-4  # logit z-loss (stabilizes large-vocab training)
+
+
+def cross_entropy(logits, targets, *, z_loss_weight: float = 0.0):
+    """Mean CE over all positions; fp32; optional z-loss."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    true_logit = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    nll = (lse - true_logit).mean()
+    if z_loss_weight:
+        nll = nll + z_loss_weight * jnp.square(lse).mean()
+    return nll
+
+
+def make_loss_fn(model: ModelApi, ctx: EngineContext, tcfg: TrainConfig):
+    cfg = model.cfg
+
+    def loss_fn(params, batch):
+        logits, aux = model.forward(params, batch, ctx, remat=tcfg.remat)
+        targets = batch["targets"]
+        logits = logits[:, -targets.shape[1] :]  # frontend positions carry no loss
+        loss = cross_entropy(logits, targets, z_loss_weight=tcfg.z_loss_weight)
+        if cfg.moe:
+            loss = loss + tcfg.lb_loss_weight * aux.get("lb_loss", 0.0)
+        return loss, {"ce_loss": loss}
+
+    return loss_fn
+
+
+def make_train_step(model: ModelApi, ctx: EngineContext, tcfg: TrainConfig):
+    """(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    With ``microbatches > 1`` the global batch is split along axis 0 and
+    accumulated with a ``lax.scan`` (per-microbatch grads never coexist).
+    """
+    loss_fn = make_loss_fn(model, ctx, tcfg)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(params, opt_state, batch):
+        if tcfg.microbatches > 1:
+            mb = tcfg.microbatches
+
+            def split(x):
+                b = x.shape[0]
+                return x.reshape(mb, b // mb, *x.shape[1:])
+
+            batches = jax.tree.map(split, batch)
+
+            def acc_fn(carry, mbatch):
+                (loss, metrics), grads = grad_fn(params, mbatch)
+                carry_loss, carry_grads = carry
+                new_grads = jax.tree.map(jnp.add, carry_grads, grads)
+                return (carry_loss + loss, new_grads), None
+
+            zero_grads = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (loss_sum, grads), _ = jax.lax.scan(acc_fn, (jnp.zeros(()), zero_grads), batches)
+            loss = loss_sum / mb
+            grads = jax.tree.map(lambda g: g / mb, grads)
+            metrics = {"ce_loss": loss}
+        else:
+            (loss, metrics), grads = grad_fn(params, batch)
+
+        params, opt_state, om = opt.apply_updates(params, grads, opt_state, tcfg.optimizer)
+        metrics = dict(metrics, **om, loss=loss)
+        return params, opt_state, metrics
+
+    return train_step

@@ -1,0 +1,103 @@
+"""Property tests for the unified CORDIC core — the paper's central invariant:
+iteration depth d bounds the multiplier residual by 2^-(d-1)."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    FXP8,
+    FXP8_UNIT,
+    FXP16,
+    FXP16_UNIT,
+    cordic_div,
+    cordic_exp,
+    cordic_mul,
+    dequantize,
+    full_depth,
+    quantize,
+    signed_digit_round,
+)
+from repro.core.cordic import hyperbolic_sequence, linear_rotate
+
+
+def test_hyperbolic_sequence_repeats():
+    seq = hyperbolic_sequence(20)
+    assert seq[:6] == (1, 2, 3, 4, 4, 5)
+    assert seq.count(4) == 2 and seq.count(13) == 2
+
+
+@pytest.mark.parametrize("fmt,w_fmt", [(FXP8, FXP8_UNIT), (FXP16, FXP16_UNIT)], ids=["fxp8", "fxp16"])
+@pytest.mark.parametrize("depth_frac", [1.0, 2 / 3, 0.5])
+def test_mul_error_bound(fmt, w_fmt, depth_frac, rng):
+    """|cordic_mul(x,w) - x*w| <= |x| 2^-(d-1) + d LSB(x) (sd residual + shift truncation)."""
+    depth = max(2, int(full_depth(w_fmt) * depth_frac))
+    x = rng.uniform(fmt.min_value, fmt.max_value, 2048).astype(np.float32)
+    w = rng.uniform(-1.98, 1.98, 2048).astype(np.float32)
+    xq, wq = quantize(x, fmt), quantize(w, w_fmt)
+    y = np.asarray(dequantize(cordic_mul(xq, wq, depth, w_fmt), fmt))
+    true = np.asarray(dequantize(xq, fmt)) * np.asarray(dequantize(wq, w_fmt))
+    bound = np.abs(np.asarray(dequantize(xq, fmt))) * 2.0 ** (-(depth - 1)) + depth * fmt.scale
+    assert np.all(np.abs(y - true) <= bound + 1e-6)
+
+
+@given(w=st.floats(-1.9375, 1.9375, allow_nan=False, width=32), depth=st.integers(2, 15))
+@settings(max_examples=300, deadline=None)
+def test_signed_digit_residual(w, depth):
+    """sd_round is w rounded onto the depth-d signed-digit grid: residual <= 2^-(d-1)."""
+    sd = float(signed_digit_round(np.float32(w), depth, FXP16_UNIT))
+    wq = float(dequantize(quantize(np.float32(w), FXP16_UNIT), FXP16_UNIT))
+    assert abs(sd - wq) <= 2.0 ** (-(depth - 1)) + FXP16_UNIT.scale
+
+
+def test_depth_monotonicity(rng):
+    """More iterations never hurt (on average): mean |err| shrinks with depth."""
+    x = rng.uniform(-1.9, 1.9, 4096).astype(np.float32)
+    w = rng.uniform(-1.9, 1.9, 4096).astype(np.float32)
+    xq, wq = quantize(x, FXP16), quantize(w, FXP16_UNIT)
+    true = np.asarray(dequantize(xq, FXP16)) * np.asarray(dequantize(wq, FXP16_UNIT))
+    errs = []
+    for d in (3, 6, 9, 12, 15):
+        y = np.asarray(dequantize(cordic_mul(xq, wq, d, FXP16_UNIT), FXP16))
+        errs.append(np.mean(np.abs(y - true)))
+    assert all(errs[i + 1] < errs[i] for i in range(len(errs) - 1)), errs
+
+
+def test_cycle_reduction_claim():
+    """Paper C2: approximate mode saves ~33% of iterations."""
+    from repro.core import approx_depth, mac_cycles
+
+    full, approx = full_depth(FXP16_UNIT), approx_depth(FXP16_UNIT)
+    saving = 1 - mac_cycles(64, approx) / mac_cycles(64, full)
+    assert 0.25 <= saving <= 0.40, saving
+
+
+@pytest.mark.parametrize("fmt", [FXP16], ids=str)
+def test_div(fmt, rng):
+    num = rng.uniform(0.0, 1.0, 2048).astype(np.float32)
+    den = rng.uniform(1.0, 2.0, 2048).astype(np.float32)
+    q = np.asarray(dequantize(cordic_div(quantize(num, fmt), quantize(den, fmt), full_depth(fmt), fmt), fmt))
+    assert np.max(np.abs(q - num / den)) <= 8 * fmt.scale
+
+
+def test_exp_accuracy(rng):
+    x = rng.uniform(-8.0, 0.0, 4096).astype(np.float32)
+    e = np.asarray(dequantize(cordic_exp(quantize(x, FXP16), full_depth(FXP16), FXP16), FXP16))
+    assert np.max(np.abs(e - np.exp(x))) <= 16 * FXP16.scale
+
+
+def test_exp_range_reduction_boundaries():
+    """Exercise quotient rounding around multiples of ln2 (incl. negatives)."""
+    pts = np.array([k * math.log(2) + d for k in range(-8, 1) for d in (-0.01, 0.0, 0.01)], np.float32)
+    e = np.asarray(dequantize(cordic_exp(quantize(pts, FXP16), full_depth(FXP16), FXP16), FXP16))
+    assert np.max(np.abs(e - np.exp(pts))) <= 16 * FXP16.scale
+
+
+def test_linear_rotate_residual_returned(rng):
+    import jax.numpy as jnp
+
+    x = quantize(np.float32(1.0), FXP16)
+    z = quantize(np.float32(0.7), FXP16_UNIT)
+    y, zres = linear_rotate(x, jnp.int32(0), z, 10, FXP16_UNIT)
+    assert abs(int(zres)) <= FXP16_UNIT.one >> 8  # |z residual| <= 2^-(d-2) raw

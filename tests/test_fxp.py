@@ -1,0 +1,52 @@
+"""Property tests for the fixed-point substrate."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import FXP8, FXP16, FxPFormat, dequantize, quantize
+from repro.core.fxp import requantize, saturate
+
+FORMATS = [FXP8, FXP16, FxPFormat(8, 4), FxPFormat(16, 14), FxPFormat(12, 8)]
+
+
+@pytest.mark.parametrize("fmt", FORMATS, ids=str)
+def test_roundtrip_error_half_lsb(fmt, rng):
+    x = rng.uniform(fmt.min_value, fmt.max_value, 4096).astype(np.float32)
+    back = np.asarray(dequantize(quantize(x, fmt), fmt))
+    assert np.max(np.abs(back - x)) <= fmt.scale / 2 + 1e-7
+
+
+@pytest.mark.parametrize("fmt", FORMATS, ids=str)
+def test_saturation(fmt):
+    big = np.array([1e9, -1e9], np.float32)
+    q = np.asarray(quantize(big, fmt))
+    assert q[0] == fmt.qmax and q[1] == fmt.qmin
+
+
+@given(
+    val=st.floats(-1.875, 1.875, allow_nan=False, width=32),
+    frac_a=st.integers(4, 14),
+    frac_b=st.integers(4, 14),
+)
+@settings(max_examples=200, deadline=None)
+def test_requantize_preserves_value(val, frac_a, frac_b):
+    a, b = FxPFormat(16, frac_a), FxPFormat(16, frac_b)
+    qa = quantize(np.float32(val), a)
+    qb = requantize(qa, a, b)
+    va, vb = float(dequantize(qa, a)), float(dequantize(qb, b))
+    assert abs(va - vb) <= max(a.scale, b.scale) / 2 + 1e-7
+
+
+def test_format_invariants():
+    assert FXP8.one == 64 and FXP8.qmax == 127 and FXP8.qmin == -128
+    assert str(FXP8) == "Q1.6" and str(FXP16) == "Q3.12"
+    assert FXP8.storage_dtype.__name__ == "int8"
+    assert FXP16.storage_dtype.__name__ == "int16"
+
+
+def test_saturate_raw():
+    import jax.numpy as jnp
+
+    raw = jnp.array([1000, -1000, 5], jnp.int32)
+    out = np.asarray(saturate(raw, FXP8))
+    assert list(out) == [127, -128, 5]

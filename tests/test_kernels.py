@@ -1,0 +1,149 @@
+"""Pallas kernel validation (interpret mode): sweeps vs pure-jnp oracles.
+
+Both kernels must be BIT-IDENTICAL to their refs — the MAC kernel reproduces
+carmen_matmul_fast (same quantize/sd-round/int-dot arithmetic), and the AF
+kernel traces the same core fixed-point functions the oracle evaluates.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (
+    FXP8,
+    FXP8_UNIT,
+    FXP16,
+    FXP16_UNIT,
+    approx_depth,
+    carmen_matmul_fast,
+    full_depth,
+)
+from repro.core.activations import AF_NAMES
+from repro.kernels.cordic_af import ops as af_ops
+from repro.kernels.cordic_af import ref as af_ref_mod
+from repro.kernels.cordic_mac import ops as mac_ops
+from repro.kernels.cordic_mac import ref as mac_ref_mod
+
+
+# ---------------------------------------------------------------------------
+# cordic_mac
+# ---------------------------------------------------------------------------
+
+MAC_SHAPES = [(8, 16, 8), (48, 200, 72), (128, 256, 128), (33, 127, 65), (1, 512, 1)]
+
+
+@pytest.mark.parametrize("m,k,n", MAC_SHAPES)
+@pytest.mark.parametrize(
+    "x_fmt,w_fmt", [(FXP8, FXP8_UNIT), (FXP16, FXP16_UNIT)], ids=["fxp8", "fxp16"]
+)
+def test_mac_kernel_matches_fast_model(m, k, n, x_fmt, w_fmt, rng):
+    depth = full_depth(w_fmt)
+    x = rng.uniform(-1, 1, (m, k)).astype(np.float32)
+    w = rng.uniform(-1, 1, (k, n)).astype(np.float32)
+    out = np.asarray(mac_ops.cordic_mac(x, w, depth=depth, x_fmt=x_fmt, w_fmt=w_fmt))
+    ref = np.asarray(carmen_matmul_fast(x, w, depth, x_fmt, w_fmt))
+    if x_fmt.frac + w_fmt.frac <= 18:
+        # FxP8: every product/sum sits on a grid f32 carries exactly -> bit-equal.
+        np.testing.assert_array_equal(out, ref)
+    else:
+        # FxP16 products live on a 2^-26 grid; the *oracle's* f32 matmul rounds
+        # while the kernel's integer accumulator is exact. Tolerance = f32 ulp
+        # accumulation over K.
+        np.testing.assert_allclose(out, ref, rtol=0, atol=k * 2.0**-22)
+
+
+@pytest.mark.parametrize("depth_kind", ["full", "approx", "minimal"])
+def test_mac_kernel_depth_sweep(depth_kind, rng):
+    depth = {"full": full_depth(FXP8_UNIT), "approx": approx_depth(FXP8_UNIT), "minimal": 2}[
+        depth_kind
+    ]
+    x = rng.uniform(-1, 1, (32, 64)).astype(np.float32)
+    w = rng.uniform(-1, 1, (64, 32)).astype(np.float32)
+    out = np.asarray(mac_ops.cordic_mac(x, w, depth=depth))
+    ref = np.asarray(carmen_matmul_fast(x, w, depth, FXP8, FXP8_UNIT))
+    np.testing.assert_array_equal(out, ref)
+
+
+def test_mac_kernel_oracle_path(rng):
+    """Kernel against the explicit int-arithmetic oracle (ref.py)."""
+    x = rng.uniform(-1, 1, (16, 32)).astype(np.float32)
+    w = rng.uniform(-1, 1, (32, 16)).astype(np.float32)
+    x_q, xs = mac_ops.quantize_activations(x, FXP8)
+    w_q, ws = mac_ops.quantize_weights(w, 5, FXP8_UNIT)
+    ref = np.asarray(
+        mac_ref_mod.mac_matmul_ref(
+            x_q, w_q, np.full((16, 1), xs, np.float32), np.full((1, 16), ws, np.float32)
+        )
+    )
+    out = np.asarray(mac_ops.cordic_mac(x, w, depth=5))
+    np.testing.assert_array_equal(out, ref)
+
+
+def test_mac_kernel_fused_relu(rng):
+    x = rng.uniform(-1, 1, (16, 32)).astype(np.float32)
+    w = rng.uniform(-1, 1, (32, 16)).astype(np.float32)
+    out = np.asarray(mac_ops.cordic_mac(x, w, depth=7, fuse_relu=True))
+    base = np.asarray(mac_ops.cordic_mac(x, w, depth=7))
+    np.testing.assert_array_equal(out, np.maximum(base, 0.0))
+
+
+def test_mac_weight_bank_fits_storage(rng):
+    """Signed-digit weight ints must fit the declared storage dtype."""
+    w = rng.uniform(-1.99, 1.99, (64, 64)).astype(np.float32)
+    w_q, _ = mac_ops.quantize_weights(w, full_depth(FXP8_UNIT), FXP8_UNIT)
+    assert w_q.dtype == np.int8
+    w_q16, _ = mac_ops.quantize_weights(w, full_depth(FXP16_UNIT), FXP16_UNIT)
+    assert w_q16.dtype == np.int16
+
+
+# ---------------------------------------------------------------------------
+# cordic_af
+# ---------------------------------------------------------------------------
+
+AF_SHAPES = [(4, 16), (100, 300), (256, 256), (3, 1000)]
+
+
+@pytest.mark.parametrize("mode", AF_NAMES)
+@pytest.mark.parametrize("fmt", [FXP8, FXP16], ids=["fxp8", "fxp16"])
+def test_af_kernel_matches_ref(mode, fmt, rng):
+    x = rng.uniform(-1.9, 1.9, (64, 128)).astype(np.float32)
+    out = np.asarray(af_ops.multi_af_pallas(x, mode, depth=full_depth(fmt), fmt=fmt))
+    ref = np.asarray(af_ref_mod.af_ref(x, mode, depth=full_depth(fmt), fmt=fmt))
+    np.testing.assert_array_equal(out, ref)
+
+
+@pytest.mark.parametrize("shape", AF_SHAPES)
+def test_af_kernel_shape_sweep(shape, rng):
+    x = rng.uniform(-1.9, 1.9, shape).astype(np.float32)
+    out = np.asarray(af_ops.multi_af_pallas(x, "gelu", depth=7, fmt=FXP8))
+    ref = np.asarray(af_ref_mod.af_ref(x, "gelu", depth=7, fmt=FXP8))
+    np.testing.assert_array_equal(out, ref)
+
+
+def test_af_kernel_runtime_mode_switch(rng):
+    """One compiled kernel, mode switched at runtime (time-multiplexing)."""
+    import jax
+
+    x = rng.uniform(-1.5, 1.5, (8, 128)).astype(np.float32)
+    f = jax.jit(
+        lambda m: af_ops.multi_af_pallas(x, int(0), depth=7, fmt=FXP8)
+        if False
+        else None
+    )
+    # call through the traced-mode path: pass int indices
+    outs = {}
+    for mode in af_ops.AF_INDEX:
+        if mode == "softmax":
+            continue
+        idx = af_ops.af_index(mode)
+        outs[mode] = np.asarray(af_ops.multi_af_pallas(x, idx, depth=7, fmt=FXP8))
+        ref = np.asarray(af_ref_mod.af_ref(x, mode, depth=7, fmt=FXP8))
+        np.testing.assert_array_equal(outs[mode], ref)
+    # different modes actually produce different outputs
+    assert not np.array_equal(outs["relu"], outs["tanh"])
+
+
+def test_af_kernel_3d_input(rng):
+    x = rng.uniform(-1, 1, (2, 10, 64)).astype(np.float32)
+    out = np.asarray(af_ops.multi_af_pallas(x, "swish", depth=7, fmt=FXP8))
+    assert out.shape == (2, 10, 64)
+    ref = np.asarray(af_ref_mod.af_ref(x, "swish", depth=7, fmt=FXP8))
+    np.testing.assert_array_equal(out, ref)

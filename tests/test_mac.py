@@ -1,0 +1,71 @@
+"""CORDIC MAC engine: bit-faithful sim vs fast error model vs exact."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    FXP8,
+    FXP8_UNIT,
+    FXP16,
+    FXP16_UNIT,
+    carmen_matmul_fast,
+    cordic_dot,
+    cordic_matmul,
+    dequantize,
+    full_depth,
+    mac_cycles,
+    quantize,
+)
+
+
+@pytest.mark.parametrize("fmt,w_fmt", [(FXP8, FXP8_UNIT), (FXP16, FXP16_UNIT)], ids=["fxp8", "fxp16"])
+@pytest.mark.parametrize("k", [16, 64, 256])
+def test_dot_error_scaling(fmt, w_fmt, k, rng):
+    """K-length dot error <= K * (per-product bound); checks the accumulator is exact."""
+    depth = full_depth(w_fmt)
+    x = rng.uniform(-0.9, 0.9, (32, k)).astype(np.float32)
+    w = rng.uniform(-0.9, 0.9, (32, k)).astype(np.float32)
+    xq, wq = quantize(x, fmt), quantize(w, w_fmt)
+    y = np.asarray(dequantize(cordic_dot(xq, wq, depth, w_fmt), fmt))
+    true = np.sum(np.asarray(dequantize(xq, fmt)) * np.asarray(dequantize(wq, w_fmt)), -1)
+    per_product = 0.9 * 2.0 ** (-(depth - 1)) + depth * fmt.scale
+    assert np.max(np.abs(y - true)) <= k * per_product
+
+
+def test_matmul_equals_dot(rng):
+    """The scanned matmul is bit-exact to the per-row dot (chained accumulator)."""
+    x = rng.uniform(-1, 1, (4, 32)).astype(np.float32)
+    w = rng.uniform(-1, 1, (32, 8)).astype(np.float32)
+    xq, wq = quantize(x, FXP8), quantize(w, FXP8_UNIT)
+    mm = np.asarray(cordic_matmul(xq, wq, 5, FXP8_UNIT))
+    for j in range(8):
+        dot = np.asarray(cordic_dot(xq, np.broadcast_to(np.asarray(wq)[:, j], (4, 32)), 5, FXP8_UNIT))
+        assert np.array_equal(mm[:, j], dot)
+
+
+@pytest.mark.parametrize("depth", [4, 7])
+def test_fast_model_matches_bitexact(depth, rng):
+    """carmen_matmul_fast deviates from the bit-faithful sim only by shift
+    truncation: |dev| <= K * depth * LSB(x) (each iteration floors one shift)."""
+    m, k, n = 8, 64, 16
+    x = rng.uniform(-1, 1, (m, k)).astype(np.float32)
+    w = rng.uniform(-1, 1, (k, n)).astype(np.float32)
+    xq, wq = quantize(x, FXP8), quantize(w, FXP8_UNIT)
+    bit = np.asarray(dequantize(cordic_matmul(xq, wq, depth, FXP8_UNIT), FXP8))
+    fast = np.asarray(carmen_matmul_fast(x, w, depth, FXP8, FXP8_UNIT))
+    assert np.max(np.abs(bit - fast)) <= k * depth * FXP8.scale
+
+
+def test_relative_error_at_full_depth(rng):
+    """End-to-end matmul relative error at FxP16 full depth is small (<1%)."""
+    m, k, n = 16, 128, 32
+    x = rng.uniform(-1, 1, (m, k)).astype(np.float32)
+    w = rng.uniform(-1, 1, (k, n)).astype(np.float32)
+    fast = np.asarray(carmen_matmul_fast(x, w, full_depth(FXP16_UNIT), FXP16, FXP16_UNIT))
+    exact = x @ w
+    rel = np.abs(fast - exact) / (np.abs(exact) + 1.0)
+    assert np.max(rel) < 0.01
+
+
+def test_cycles_model():
+    assert mac_cycles(64, 7) == 64 * 8
+    assert 1 - mac_cycles(64, 10) / mac_cycles(64, 15) == pytest.approx(0.3125)

@@ -1,0 +1,168 @@
+"""Per-architecture smoke tests (reduced configs, CPU) + consistency checks.
+
+The decode-vs-forward check is the strongest invariant here: step-by-step
+decoding with KV caches / SSM states must reproduce the teacher-forced forward
+logits. For MoE archs the comparison uses a large capacity factor because
+capacity drops are a train-time-only effect (decode never drops) — standard
+capacity-MoE semantics, verified bit-consistent once drops are removed.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_config, reduced
+from repro.core import EngineContext, FXP8, PrecisionPolicy
+from repro.models import get_model
+
+ALL_ARCHS = sorted(ARCHS)
+CTX = EngineContext(mode="exact", compute_dtype=jnp.float32)
+
+
+def _batch(cfg, key, b=2, s=16):
+    batch = {"tokens": jax.random.randint(key, (b, s), 0, cfg.vocab_size)}
+    if cfg.frontend:
+        batch["frontend_embeds"] = (
+            jax.random.normal(key, (b, cfg.frontend_tokens, cfg.d_model)) * 0.02
+        )
+    return batch
+
+
+@pytest.fixture(scope="module")
+def key():
+    return jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_smoke_forward(arch, key):
+    cfg = reduced(get_config(arch))
+    m = get_model(cfg)
+    prms = m.init(key)
+    batch = _batch(cfg, key)
+    logits, aux = m.forward(prms, batch, CTX)
+    expect_s = 16 + (cfg.frontend_tokens if cfg.frontend == "vision" else 0)
+    assert logits.shape == (2, expect_s, cfg.vocab_size)
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_smoke_train_grad(arch, key):
+    """One backward pass: grads exist, are finite, and are nonzero somewhere."""
+    cfg = reduced(get_config(arch))
+    m = get_model(cfg)
+    prms = m.init(key)
+    batch = _batch(cfg, key)
+    targets = jnp.roll(batch["tokens"], -1, axis=1)
+
+    def loss_fn(p):
+        logits, aux = m.forward(p, batch, CTX, remat=True)
+        logits = logits[:, -targets.shape[1] :]
+        ll = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(ll, targets[..., None], axis=-1).mean()
+        return nll + 0.01 * aux.get("lb_loss", 0.0)
+
+    loss, grads = jax.value_and_grad(loss_fn)(prms)
+    assert np.isfinite(float(loss))
+    leaves = jax.tree.leaves(grads)
+    assert all(np.isfinite(np.asarray(g)).all() for g in leaves)
+    assert any(np.abs(np.asarray(g)).max() > 0 for g in leaves)
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_decode_matches_forward(arch, key):
+    cfg = reduced(get_config(arch))
+    if cfg.moe:  # remove capacity drops (train-only effect) for exact comparison
+        cfg = dataclasses.replace(cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=8.0))
+    m = get_model(cfg)
+    prms = m.init(key)
+    b, s = 2, 16
+    batch = _batch(cfg, key, b, s)
+    full_logits, _ = m.forward(prms, batch, CTX)
+
+    cache = m.make_cache(b, s, dtype=jnp.float32)
+    if cfg.family == "audio":
+        from repro.models import encdec
+
+        enc = encdec.encode(prms, batch["frontend_embeds"], cfg, CTX)
+        cache["cross"] = encdec.prefill_cross_kv(prms, enc, cfg, CTX)
+    elif cfg.frontend == "vision":
+        pytest.skip("vlm decode requires image-prefill path (covered in serve tests)")
+
+    outs = []
+    for t in range(s):
+        lg, cache = m.decode_step(prms, batch["tokens"][:, t : t + 1], cache, CTX)
+        outs.append(np.asarray(lg[:, 0]))
+    step_logits = np.stack(outs, 1)
+    ref = np.asarray(full_logits[:, -s:])
+    np.testing.assert_allclose(step_logits, ref, atol=5e-5, rtol=1e-4)
+
+
+def test_carmen_mode_forward_close_to_exact(key):
+    """The paper's claim C1 at model level: CARMEN FxP16 execution reproduces
+    the exact baseline's argmax (FxP8 checked for finiteness only — a
+    random-init model's near-uniform logits make FxP8 argmax flaky; the
+    trained-model FxP8 claim is benchmarks/fig3)."""
+    from repro.core import FXP16
+
+    cfg = reduced(get_config("olmo-1b"))
+    m = get_model(cfg)
+    prms = m.init(key)
+    batch = _batch(cfg, key)
+    exact, _ = m.forward(prms, batch, CTX)
+    ctx16 = EngineContext(mode="carmen", policy=PrecisionPolicy.accurate(FXP16), compute_dtype=jnp.float32)
+    carmen16, _ = m.forward(prms, batch, ctx16)
+    agree = (np.asarray(exact).argmax(-1) == np.asarray(carmen16).argmax(-1)).mean()
+    assert agree > 0.9, agree
+    ctx8 = EngineContext(mode="carmen", policy=PrecisionPolicy.accurate(FXP8), compute_dtype=jnp.float32)
+    carmen8, _ = m.forward(prms, batch, ctx8)
+    assert np.isfinite(np.asarray(carmen8)).all()
+
+
+def test_moe_load_balance_loss_present(key):
+    cfg = reduced(get_config("deepseek-v3-671b"))
+    m = get_model(cfg)
+    prms = m.init(key)
+    _, aux = m.forward(prms, _batch(cfg, key), CTX)
+    assert float(aux["lb_loss"]) > 0
+
+
+def test_moe_dispatch_plan_properties(key):
+    """Every expert queue slot is either valid+unique or masked."""
+    from repro.models.blocks import _dispatch_indices
+
+    e, s, k, cap = 4, 32, 2, 10
+    idx = jax.random.randint(key, (s, k), 0, e)
+    gather_idx, valid, rank = _dispatch_indices(idx, e, cap)
+    gi, va = np.asarray(gather_idx), np.asarray(valid)
+    flat = np.asarray(idx).reshape(-1)
+    # valid slots reference choices routed to that expert, no duplicates
+    seen = set()
+    for ee in range(e):
+        for c in range(cap):
+            if va[ee, c]:
+                choice = gi[ee, c]
+                assert flat[choice] == ee
+                assert choice not in seen
+                seen.add(choice)
+    # number of valid slots == number of choices, up to capacity clipping
+    counts = np.bincount(flat, minlength=e)
+    assert va.sum() == np.minimum(counts, cap).sum()
+
+
+def test_mamba_state_handoff(key):
+    """Prefill then continue decoding == full-sequence forward (conv+ssm state)."""
+    cfg = reduced(get_config("mamba2-780m"))
+    m = get_model(cfg)
+    prms = m.init(key)
+    b, s = 1, 32
+    toks = jax.random.randint(key, (b, s), 0, cfg.vocab_size)
+    full, _ = m.forward(prms, {"tokens": toks}, CTX)
+    # decode all the way (states only, no prefill shortcut for ssm)
+    cache = m.make_cache(b, s, dtype=jnp.float32)
+    outs = []
+    for t in range(s):
+        lg, cache = m.decode_step(prms, toks[:, t : t + 1], cache, CTX)
+        outs.append(np.asarray(lg[:, 0]))
+    np.testing.assert_allclose(np.stack(outs, 1), np.asarray(full), atol=5e-5, rtol=1e-4)

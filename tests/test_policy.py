@@ -1,0 +1,52 @@
+"""Accuracy-sensitivity metric and depth assignment (paper §III)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    FXP8,
+    PrecisionPolicy,
+    approx_depth,
+    assign_depths,
+    full_depth,
+    sensitivity_scan,
+)
+
+
+def _toy_apply(params, batch, noise):
+    """Two-layer MLP with noise-injection taps after each layer."""
+    h = batch @ params["w1"]
+    h = h + noise.get("l1", 0.0) * jnp.ones_like(h)
+    h = jnp.tanh(h)
+    out = h @ params["w2"]
+    out = out + noise.get("l2", 0.0) * jnp.ones_like(out)
+    return out
+
+
+def test_sensitivity_orders_layers(rng):
+    # w2 large ==> perturbations at l1 are amplified; l2 taps the output directly.
+    params = {
+        "w1": rng.standard_normal((8, 16)).astype(np.float32) * 0.1,
+        "w2": rng.standard_normal((16, 4)).astype(np.float32) * 10.0,
+    }
+    batch = rng.standard_normal((32, 8)).astype(np.float32)
+    sens = sensitivity_scan(_toy_apply, params, batch, ["l1", "l2"], fmt=FXP8)
+    assert sens["l1"] > sens["l2"] > 0
+
+
+def test_assign_depths_meets_budget_and_pins_critical():
+    sens = {"mlp.0": 0.01, "mlp.1": 0.02, "attn.router": 0.001, "head": 0.5}
+    pol = assign_depths(sens, fmt=FXP8, cycle_reduction_target=0.20)
+    # router never demoted despite lowest sensitivity
+    assert pol.for_layer("attn.router").depth == full_depth(FXP8)
+    # least-sensitive non-critical layers demoted first
+    assert pol.for_layer("mlp.0").depth == approx_depth(FXP8)
+    # most-sensitive stays accurate
+    assert pol.for_layer("head").depth == full_depth(FXP8)
+
+
+def test_policy_uniform_and_modes():
+    acc = PrecisionPolicy.accurate(FXP8).default
+    app = PrecisionPolicy.approximate(FXP8).default
+    assert acc.mode == "accurate" and app.mode == "approximate"
+    assert app.depth < acc.depth

@@ -1,0 +1,55 @@
+"""AAD pooling unit."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from hypothesis.extra.numpy import arrays
+
+from repro.core import aad_pool, aad_pool_1d, avg_pool, max_pool
+
+
+def test_shapes(rng):
+    x = rng.standard_normal((2, 8, 8, 3)).astype(np.float32)
+    assert aad_pool(x, 2).shape == (2, 4, 4, 3)
+    assert avg_pool(x, 2).shape == (2, 4, 4, 3)
+    assert max_pool(x, 2).shape == (2, 4, 4, 3)
+    assert aad_pool(x, 2, stride=1).shape == (2, 7, 7, 3)
+
+
+def test_constant_window_is_identity():
+    x = np.full((1, 4, 4, 1), 3.25, np.float32)
+    np.testing.assert_allclose(np.asarray(aad_pool(x, 2)), 3.25)
+
+
+def test_outlier_rejection():
+    """AAD's reason to exist: a quantization-noise outlier must not dominate."""
+    win = np.array([1.0, 1.1, 0.9, 50.0], np.float32).reshape(1, 2, 2, 1)
+    out = np.asarray(aad_pool(win, 2)).item()
+    assert abs(out - 1.0) < 0.2  # ~mean of inliers, not (1+1.1+0.9+50)/4 = 13.25
+    assert abs(np.asarray(avg_pool(win, 2)).item() - 13.25) < 1e-3
+
+
+@given(
+    x=arrays(
+        np.float32,
+        (1, 4, 4, 2),
+        elements=st.floats(-100, 100, allow_nan=False, width=32),
+    )
+)
+@settings(max_examples=100, deadline=None)
+def test_output_within_window_hull(x):
+    """Pooled value always lies in [min, max] of its window (robust-mean property)."""
+    out = np.asarray(aad_pool(x, 2))
+    for i in range(2):
+        for j in range(2):
+            win = x[0, 2 * i : 2 * i + 2, 2 * j : 2 * j + 2, :]
+            lo, hi = win.min(axis=(0, 1)), win.max(axis=(0, 1))
+            assert np.all(out[0, i, j] >= lo - 1e-4) and np.all(out[0, i, j] <= hi + 1e-4)
+
+
+def test_1d_variant(rng):
+    x = rng.standard_normal((2, 16, 4)).astype(np.float32)
+    out = np.asarray(aad_pool_1d(x, 4))
+    assert out.shape == (2, 4, 4)
+    np.testing.assert_allclose(
+        np.asarray(aad_pool_1d(np.ones((1, 8, 1), np.float32), 2)), 1.0
+    )

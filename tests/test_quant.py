@@ -1,0 +1,58 @@
+"""Scaled-integer quantization substrate (quant/)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.quant import (
+    QuantizedLinear,
+    dequantize_params,
+    fake_quant,
+    quantize_params_int8,
+)
+
+
+def test_fake_quant_roundtrip_error(rng):
+    x = rng.standard_normal((64, 64)).astype(np.float32)
+    q = np.asarray(fake_quant(jnp.asarray(x), bits=8))
+    # symmetric 8-bit: error <= scale/2 = max|x|/127/2
+    assert np.max(np.abs(q - x)) <= np.abs(x).max() / 127.0 / 2 + 1e-6
+
+
+def test_fake_quant_ste_gradient(rng):
+    x = jnp.asarray(rng.standard_normal((16,)).astype(np.float32))
+    g = jax.grad(lambda x: jnp.sum(fake_quant(x) ** 2))(x)
+    # STE: gradient ~ 2*q(x) but nonzero and finite everywhere
+    assert np.isfinite(np.asarray(g)).all() and np.any(np.asarray(g) != 0)
+
+
+def test_quantize_params_int8_structure(rng):
+    params = {
+        "w": rng.standard_normal((32, 16)).astype(np.float32),
+        "norm": rng.standard_normal((16,)).astype(np.float32),
+    }
+    q = quantize_params_int8(jax.tree.map(jnp.asarray, params))
+    assert q["w"]["qvalue"].dtype == jnp.int8
+    assert q["norm"]["qscale"] is None  # 1-D criticality-pinned leaves stay float
+    back = dequantize_params(q)
+    rel = np.abs(np.asarray(back["w"]) - params["w"]).max() / np.abs(params["w"]).max()
+    assert rel < 0.01
+
+
+def test_quantized_linear_matches_float(rng):
+    w = rng.uniform(-1, 1, (64, 32)).astype(np.float32)
+    x = rng.uniform(-1, 1, (8, 64)).astype(np.float32)
+    ql = QuantizedLinear.from_float(jnp.asarray(w))
+    out = np.asarray(ql(jnp.asarray(x)))
+    rel = np.abs(out - x @ w).max() / (np.abs(x @ w).max() + 1e-9)
+    assert rel < 0.03
+
+
+def test_quantized_linear_effective_bits_degrade(rng):
+    w = rng.uniform(-1, 1, (64, 32)).astype(np.float32)
+    x = rng.uniform(-1, 1, (8, 64)).astype(np.float32)
+    ql = QuantizedLinear.from_float(jnp.asarray(w))
+    errs = [
+        np.abs(np.asarray(ql(jnp.asarray(x), effective_bits=b)) - x @ w).mean()
+        for b in (8, 5, 3)
+    ]
+    assert errs[0] < errs[1] < errs[2]
