@@ -1,0 +1,97 @@
+"""Per-call vs prepared weight-bank serving benchmark (JSON output).
+
+Measures the jitted decode step (the serving hot loop) with the seed's
+per-call weight path (weights re-rounded / re-scaled every step) against the
+prepared path (``prepare_params``: quantize once, serve fast), per engine
+mode. Complements the ``benchmarks/run.py`` CSV tables with a JSON record:
+
+    PYTHONPATH=src python -m benchmarks.bench_prepared --arch olmo-1b \
+        --modes carmen,int8 --steps 20
+
+writes ``artifacts/bench/bench_prepared.json`` (and prints it).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, get_config, reduced as reduce_cfg
+from repro.core import EngineContext, FXP8, PrecisionPolicy, prepare_params
+from repro.models import get_model
+from repro.serve.engine import make_decode_sample_step
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "artifacts", "bench")
+
+
+def bench_mode(model, params, mode: str, *, slots: int, max_len: int, steps: int):
+    policy = PrecisionPolicy.accurate(FXP8)
+    ctx = EngineContext(mode=mode, policy=policy, compute_dtype=jnp.float32)
+    prepared = prepare_params(params, policy, mode, specs=model.specs())
+    rec = {}
+    for label, p in (("per_call", params), ("prepared", prepared)):
+        decode = jax.jit(make_decode_sample_step(model, ctx))
+        cache = model.make_cache(slots, max_len, dtype=jnp.float32)
+        toks = jnp.zeros((slots, 1), jnp.int32)
+        tok, cache = decode(p, toks, cache)  # compile + first step
+        jax.block_until_ready(tok)
+        t0 = time.perf_counter()
+        for _ in range(steps):
+            tok, cache = decode(p, tok, cache)
+        jax.block_until_ready(tok)
+        dt = time.perf_counter() - t0
+        rec[label] = {
+            "step_ms": round(1e3 * dt / steps, 3),
+            "tok_s": round(steps * slots / dt, 1),
+        }
+    rec["speedup"] = round(rec["per_call"]["step_ms"] / rec["prepared"]["step_ms"], 2)
+    return rec
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=sorted(ARCHS), default="olmo-1b")
+    ap.add_argument("--full-size", action="store_true",
+                    help="benchmark the unreduced config")
+    ap.add_argument("--modes", default="carmen,int8")
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--out", default=os.path.join(ARTIFACTS, "bench_prepared.json"))
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if not args.full_size:
+        cfg = reduce_cfg(cfg)
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    record = {
+        "arch": args.arch,
+        "reduced": not args.full_size,
+        "slots": args.slots,
+        "steps": args.steps,
+        "backend": jax.default_backend(),
+        "modes": {},
+    }
+    for mode in args.modes.split(","):
+        record["modes"][mode] = bench_mode(
+            model, params, mode, slots=args.slots, max_len=args.max_len,
+            steps=args.steps,
+        )
+
+    payload = json.dumps(record, indent=1)
+    print(payload)
+    if args.out:
+        os.makedirs(os.path.dirname(args.out), exist_ok=True)
+        with open(args.out, "w") as f:
+            f.write(payload + "\n")
+    return record
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,135 @@
+"""Execution-backend protocol + the prepared-weight container.
+
+CARMEN's silicon quantizes nothing at runtime: weights sit in the PE array
+pre-formatted and only the CORDIC iteration depth changes between modes. Each
+software backend mirrors that split with two entry points:
+
+* ``prepare(w, lp)``   — one-time weight-bank formatting (signed-digit grids,
+  int8 qvalues + per-channel scales, ...). Returns a :class:`PreparedWeight`
+  whose payload replaces the float leaf in the param tree.
+* ``dot(ctx, x, w)``   — the per-call matmul. Given a raw float leaf it runs
+  the traced per-call path (QAT / training); given a :class:`PreparedWeight`
+  it performs **zero** weight-side rounding or scale computation.
+
+:class:`PreparedWeight` is a registered pytree, so prepared param trees flow
+through ``jit`` / ``lax.scan`` (stacked layer banks) / sharding unchanged, and
+it mimics enough of the array surface (``shape``/``ndim``/``reshape``) that
+model code calling ``ctx.linear`` never notices the substitution.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..fxp import FXP8_UNIT, FXP16_UNIT, FxPFormat
+
+__all__ = ["Backend", "PreparedWeight", "unit_fmt"]
+
+
+def unit_fmt(fmt: FxPFormat) -> FxPFormat:
+    """Weight (multiplier-port) format paired with an activation format."""
+    return FXP8_UNIT if fmt.bits <= 8 else FXP16_UNIT
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class PreparedWeight:
+    """One prepared weight-bank leaf.
+
+    ``data`` is the backend payload (signed-digit-rounded float32 grid for
+    carmen/kernel, int8 qvalues for int8); ``scale`` is the per-output-channel
+    dequantization scale (int8 only, keepdims shape ``(..., 1, C)``); ``meta``
+    is a hashable tuple of (key, value) pairs recording the preparation point
+    (depth / format / effective bits) — it travels as pytree aux data, so a
+    prepared tree re-specializes jit programs when the preparation changes.
+    """
+
+    data: Any
+    scale: Any = None
+    backend: str = "exact"
+    meta: Tuple[Tuple[str, Any], ...] = ()
+
+    # -- pytree protocol ----------------------------------------------------
+    def tree_flatten(self):
+        return (self.data, self.scale), (self.backend, self.meta)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        data, scale = children
+        backend, meta = aux
+        return cls(data, scale, backend, meta)
+
+    # -- array-ish surface (what model code touches before ctx.dot) ---------
+    @property
+    def shape(self):
+        return self.data.shape
+
+    @property
+    def ndim(self):
+        return self.data.ndim
+
+    @property
+    def dtype(self):
+        return self.data.dtype
+
+    def get(self, key, default=None):
+        """meta lookup, e.g. ``w.get("depth")``."""
+        return dict(self.meta).get(key, default)
+
+    def reshape(self, *shape):
+        """Reshape the payload, carrying the per-channel scale along.
+
+        Model code reshapes weights into 2D matmul form (e.g. ``(D, H, hd) ->
+        (D, H*hd)``). The scale keeps its keepdims per-last-channel layout: a
+        plain reshape when the channel axis survives, a broadcast-then-reshape
+        when trailing axes fold into it (scale stays constant along the
+        contraction axis either way, which is what the int8 factoring needs).
+        """
+        if len(shape) == 1 and isinstance(shape[0], (tuple, list)):
+            shape = tuple(shape[0])
+        data = self.data.reshape(shape)
+        scale = self.scale
+        if scale is not None:
+            if data.shape[-1] == self.data.shape[-1]:
+                scale = scale.reshape((1,) * (data.ndim - 1) + (scale.shape[-1],))
+            elif data.shape[0] == self.data.shape[0]:
+                full = jnp.broadcast_to(scale, (1,) + self.data.shape[1:])
+                scale = full.reshape((1,) + tuple(data.shape[1:]))
+            else:
+                raise ValueError(
+                    f"cannot reshape per-channel scale {self.scale.shape} for "
+                    f"{self.data.shape} -> {data.shape}"
+                )
+        return PreparedWeight(data, scale, self.backend, self.meta)
+
+    @property
+    def T(self):
+        if self.scale is not None:
+            raise ValueError(
+                "transposing an int8 prepared weight would move the channel "
+                "scale onto the contraction axis; prepare the transposed "
+                "tensor instead (prepare_params does this for tied lm_head)"
+            )
+        return PreparedWeight(self.data.T, None, self.backend, self.meta)
+
+
+class Backend:
+    """One execution mode of the engine. Subclasses register themselves."""
+
+    name: str = "?"
+
+    def prepare(self, w, lp, *, stacked_axes: int = 0, in_axes: Optional[int] = None):
+        """Format one weight leaf for serving; default is pass-through.
+
+        ``stacked_axes`` counts leading stacked-layer axes (scan banks);
+        ``in_axes`` counts the matmul contraction axes that follow them
+        (backends with per-channel scales reduce over exactly those).
+        """
+        return w
+
+    def dot(self, ctx, x, w, *, name: str = ""):
+        """Matmul along the last axis of x / first of w."""
+        raise NotImplementedError

@@ -1,0 +1,43 @@
+"""kernel backend: the Pallas ``cordic_mac`` kernel (same math as carmen).
+
+Prepared path: weights are signed-digit-rounded once (the PE weight memory
+bank); the kernel is invoked with ``w_prequantized=True`` so its epilogue only
+re-grids the already-rounded values (an exact integer cast) instead of
+re-running the rounding recurrence per call.
+"""
+from __future__ import annotations
+
+from .. import cordic
+from ..fxp import FxPFormat
+from .base import Backend, PreparedWeight, unit_fmt
+
+__all__ = ["KernelBackend"]
+
+
+class KernelBackend(Backend):
+    name = "kernel"
+
+    def prepare(self, w, lp, *, stacked_axes: int = 0, in_axes=None):
+        fmt = unit_fmt(lp.fmt)
+        data = cordic.signed_digit_round(w, int(lp.depth), fmt)
+        return PreparedWeight(
+            data, None, self.name,
+            (("depth", int(lp.depth)), ("fmt", (fmt.bits, fmt.frac))),
+        )
+
+    def dot(self, ctx, x, w, *, name: str = ""):
+        from repro.kernels.cordic_mac import ops as mac_ops
+
+        lp = ctx.layer_precision(name)
+        x2 = x.reshape(-1, x.shape[-1])
+        if isinstance(w, PreparedWeight):
+            bits, frac = w.get("fmt")
+            out = mac_ops.cordic_mac(
+                x2, w.data, depth=w.get("depth"), x_fmt=lp.fmt,
+                w_fmt=FxPFormat(bits, frac), w_prequantized=True,
+            )
+        else:
+            out = mac_ops.cordic_mac(
+                x2, w, depth=int(lp.depth), x_fmt=lp.fmt, w_fmt=unit_fmt(lp.fmt)
+            )
+        return out.reshape(x.shape[:-1] + (w.shape[-1],)).astype(ctx.compute_dtype)

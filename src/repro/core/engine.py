@@ -6,8 +6,8 @@ runtime configuration, exactly like the silicon engine's configuration
 registers (paper §II-C "control engine ... configuration registers for runtime
 parameter tuning").
 
-Execution modes
----------------
+Execution backends (``repro.core.backends`` — registry keyed by mode)
+---------------------------------------------------------------------
 exact       FP32/bf16 matmul — the paper's FP32 baseline.
 carmen      Paper-faithful simulation: activations fake-quantized to the FxP
             format, weights rounded to the depth-d signed-digit grid
@@ -20,114 +20,39 @@ int8        Production TPU path (beyond-paper): real int8 x int8 -> int32
 kernel      The Pallas ``cordic_mac`` kernel (tests / small shapes; same math
             as ``carmen``).
 
-``depth`` may be a static int or a traced scalar (runtime-adaptive switching
-between approximate/accurate without recompilation — the paper's key claim).
+Every backend has two lifecycles: the **per-call** path (raw float weights —
+weight-side quantization re-traced every call; what QAT trains through, with
+``depth`` allowed to be a traced scalar for runtime-adaptive switching) and
+the **prepared** path (``prepare_params`` formats the weight bank once; the
+forward then does zero weight-side rounding or scale computation — the
+software analogue of CARMEN's pre-formatted PE array).
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Optional
 
-import jax
 import jax.numpy as jnp
-import numpy as np
 
-from . import cordic
-from .fxp import FXP8, FXP8_UNIT, FXP16, FXP16_UNIT, FxPFormat, dequantize, quantize
+from .backends import (
+    carmen_dot,
+    int8_dot,
+    prepare_params,
+    resolve,
+    sd_round_traced,
+)
+from .backends.base import PreparedWeight
+from .fxp import FXP8
 from .precision_policy import LayerPrecision, PrecisionPolicy
 
-__all__ = ["EngineContext", "carmen_dot", "int8_dot", "sd_round_traced"]
-
-
-def _unit_fmt(fmt: FxPFormat) -> FxPFormat:
-    """Weight (multiplier-port) format paired with an activation format."""
-    return FXP8_UNIT if fmt.bits <= 8 else FXP16_UNIT
-
-
-def sd_round_traced(w, depth, w_fmt: FxPFormat):
-    """signed_digit_round with a (possibly traced) depth: full-trip masked loop.
-
-    Runtime-adaptive mode switching: the loop bound is static (full depth) but
-    iterations beyond ``depth`` are masked out, so one compiled program serves
-    every depth — the software analogue of the paper's "no hardware
-    modification" claim.
-    """
-    z = jnp.round(jnp.asarray(w, jnp.float32) * (1 << w_fmt.frac)).astype(jnp.int32)
-    z = jnp.clip(z, w_fmt.qmin, w_fmt.qmax)
-    depth = jnp.asarray(depth, jnp.int32)
-    full = cordic.full_depth(w_fmt)
-
-    def body(k, carry):
-        z, acc = carry
-        active = k < depth
-        d = jnp.where(z >= 0, jnp.int32(1), jnp.int32(-1))
-        step = jnp.where(active, (jnp.int32(w_fmt.one) >> k) * d, 0)
-        return (z - step, acc + step)
-
-    _, acc = jax.lax.fori_loop(0, full, body, (z, jnp.zeros_like(z)))
-    return acc.astype(jnp.float32) * np.float32(w_fmt.scale)
-
-
-# --- carmen mode: fake-quant forward, straight-through backward -------------
-
-
-@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
-def _carmen_matmul_ste(x, w, depth, x_fmt: FxPFormat, w_fmt: FxPFormat):
-    xq = dequantize(quantize(x, x_fmt), x_fmt).astype(jnp.float32)
-    wq = sd_round_traced(w, depth, w_fmt)
-    return jnp.dot(xq, wq, preferred_element_type=jnp.float32)
-
-
-def _carmen_fwd(x, w, depth, x_fmt, w_fmt):
-    return _carmen_matmul_ste(x, w, depth, x_fmt, w_fmt), (x, w)
-
-
-def _carmen_bwd(x_fmt, w_fmt, res, g):
-    x, w = res
-    gf = g.astype(jnp.float32)
-    dx = jnp.dot(gf, w.astype(jnp.float32).T).astype(x.dtype)
-    dw = jnp.dot(x.astype(jnp.float32).reshape(-1, x.shape[-1]).T,
-                 gf.reshape(-1, g.shape[-1])).astype(w.dtype)
-    return dx, dw, None
-
-
-_carmen_matmul_ste.defvjp(_carmen_fwd, _carmen_bwd)
-
-
-# --- int8 mode: real integer dot (MXU-rate path) -----------------------------
-
-
-def int8_dot(x, w, *, effective_bits: int = 8, w_scale=None):
-    """int8 x int8 -> int32 dot with per-output-channel weight scales.
-
-    ``effective_bits < 8`` zeroes trailing bits of the weight grid — the int8
-    incarnation of reduced CORDIC depth. ``w_scale`` may be precomputed
-    (serving: weights stored quantized once).
-    """
-    xf = x.astype(jnp.float32)
-    # per-token (per-row) dynamic activation scale — broadcasts over the N axis
-    amax = jnp.max(jnp.abs(xf), axis=-1, keepdims=True)
-    x_scale = jnp.maximum(amax, 1e-8) / 127.0
-    xq = jnp.clip(jnp.round(xf / x_scale), -127, 127).astype(jnp.int8)
-
-    if w_scale is None:
-        wf = w.astype(jnp.float32)
-        w_scale = jnp.maximum(jnp.max(jnp.abs(wf), axis=0, keepdims=True), 1e-8) / 127.0
-        wq = jnp.clip(jnp.round(wf / w_scale), -127, 127).astype(jnp.int8)
-    else:
-        wq = w  # already int8
-    if effective_bits < 8:
-        drop = 8 - effective_bits
-        wq = ((wq.astype(jnp.int32) >> drop) << drop).astype(jnp.int8)
-
-    acc = jax.lax.dot_general(
-        xq, wq, (((xq.ndim - 1,), (0,)), ((), ())), preferred_element_type=jnp.int32
-    )
-    return acc.astype(jnp.float32) * x_scale * w_scale
-
-
-# --- dispatch ----------------------------------------------------------------
+__all__ = [
+    "EngineContext",
+    "PreparedWeight",
+    "carmen_dot",
+    "int8_dot",
+    "prepare_params",
+    "sd_round_traced",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -135,7 +60,9 @@ class EngineContext:
     """Static engine configuration threaded through model code.
 
     Hashable (usable as a jit static argument). ``mode`` selects the execution
-    path; ``policy`` supplies per-layer (fmt, depth).
+    backend; ``policy`` supplies per-layer (fmt, depth). Prepared weight
+    leaves (``prepare_params``) carry their own backend, which takes
+    precedence over ``mode`` at dispatch.
     """
 
     mode: str = "exact"  # exact | carmen | int8 | kernel
@@ -155,42 +82,11 @@ class EngineContext:
         return policy.for_layer(name)
 
     def dot(self, x, w, *, name: str = ""):
-        """Matmul along the last axis of x / first of w, CARMEN-dispatched."""
-        if self.mode == "exact":
-            out_dt = self.compute_dtype if self.tp_reduce_bf16 else jnp.float32
-            return jnp.dot(
-                x.astype(self.compute_dtype),
-                w.astype(self.compute_dtype),
-                preferred_element_type=out_dt,
-            ).astype(self.compute_dtype)
-        if self.mode == "carmen":
-            lp = self.layer_precision(name)
-            shape = x.shape[:-1] + (w.shape[-1],)
-            x2 = x.reshape(-1, x.shape[-1])
-            out = _carmen_matmul_ste(x2, w, lp.depth, lp.fmt, _unit_fmt(lp.fmt))
-            return out.reshape(shape).astype(self.compute_dtype)
-        if self.mode == "int8":
-            lp = self.layer_precision(name)
-            eff_bits = max(2, min(8, int(np.ceil(lp.depth * 8 / cordic.full_depth(lp.fmt)))))
-            return int8_dot(x, w, effective_bits=eff_bits).astype(self.compute_dtype)
-        if self.mode == "kernel":
-            from repro.kernels.cordic_mac import ops as mac_ops
-
-            lp = self.layer_precision(name)
-            x2 = x.reshape(-1, x.shape[-1])
-            out = mac_ops.cordic_mac(
-                x2, w, depth=int(lp.depth), x_fmt=lp.fmt, w_fmt=_unit_fmt(lp.fmt)
-            )
-            return out.reshape(x.shape[:-1] + (w.shape[-1],)).astype(self.compute_dtype)
-        raise ValueError(f"unknown engine mode {self.mode!r}")
+        """Matmul along the last axis of x / first of w, backend-dispatched."""
+        return resolve(w, self.mode).dot(self, x, w, name=name)
 
     def linear(self, x, w, b=None, *, name: str = ""):
         out = self.dot(x, w, name=name)
         if b is not None:
             out = out + b.astype(out.dtype)
         return out
-
-
-def carmen_dot(x, w, depth, x_fmt: FxPFormat = FXP8, w_fmt: Optional[FxPFormat] = None):
-    """Functional form of the carmen-mode matmul (used by benchmarks/tests)."""
-    return _carmen_matmul_ste(x, w, depth, x_fmt, w_fmt or _unit_fmt(x_fmt))

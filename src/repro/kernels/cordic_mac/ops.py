@@ -65,7 +65,11 @@ def quantize_activations(x, x_fmt: FxPFormat = FXP8):
 
 
 @functools.partial(
-    jax.jit, static_argnames=("depth", "x_fmt", "w_fmt", "fuse_relu", "interpret", "bm", "bn", "bk")
+    jax.jit,
+    static_argnames=(
+        "depth", "x_fmt", "w_fmt", "fuse_relu", "interpret", "bm", "bn", "bk",
+        "w_prequantized",
+    ),
 )
 def cordic_mac(
     x,
@@ -79,15 +83,27 @@ def cordic_mac(
     bm: int | None = None,
     bn: int | None = None,
     bk: int | None = None,
+    w_prequantized: bool = False,
 ):
-    """CARMEN MAC-array matmul: float (M, K) x (K, N) -> float32 (M, N)."""
+    """CARMEN MAC-array matmul: float (M, K) x (K, N) -> float32 (M, N).
+
+    ``w_prequantized=True`` declares that ``w`` already carries depth-``depth``
+    signed-digit values (a prepared weight bank): the rounding recurrence is
+    skipped and the values are cast straight onto the integer grid (exact —
+    signed-digit values are integer multiples of the format LSB).
+    """
     interpret = _interpret_default() if interpret is None else interpret
     m, k = x.shape
     k2, n = w.shape
     assert k == k2
 
     x_q, xs = quantize_activations(x, x_fmt)
-    w_q, ws = quantize_weights(w, depth, w_fmt)
+    if w_prequantized:
+        dtype = jnp.int8 if w_fmt.bits <= 8 else jnp.int16
+        w_q = jnp.round(jnp.asarray(w, jnp.float32) * (1 << w_fmt.frac)).astype(jnp.int32)
+        w_q, ws = w_q.astype(dtype), np.float32(w_fmt.scale)
+    else:
+        w_q, ws = quantize_weights(w, depth, w_fmt)
 
     bm = bm or min(_k.DEFAULT_BM, _round_up(m, 8))
     bn = bn or min(_k.DEFAULT_BN, _round_up(n, 128))

@@ -52,6 +52,25 @@ def engine_ctx(mode: str, attn: str = "xla", tp_bf16: bool = False) -> EngineCon
                          tp_reduce_bf16=tp_bf16)
 
 
+def _prepared_shardings(param_sh, prepared, mesh):
+    """Shardings for a prepared param tree: payloads inherit the raw leaf's
+    sharding, per-channel scales replicate (tiny), the synthesized tied
+    lm_head replicates (it is vocab-major; a dedicated rule can come later)."""
+    from repro.core import PreparedWeight
+
+    repl = NamedSharding(mesh, P())
+    if isinstance(prepared, dict) and "lm_head" in prepared and "lm_head" not in param_sh:
+        param_sh = dict(param_sh, lm_head=repl)
+
+    def one(sh, leaf):
+        if isinstance(leaf, PreparedWeight):
+            scale_sh = None if leaf.scale is None else repl
+            return PreparedWeight(sh, scale_sh, leaf.backend, leaf.meta)
+        return sh
+
+    return jax.tree.map(one, param_sh, prepared)
+
+
 def _batch_sharding(mesh, shape_tuple):
     """Shard dim 0 over (pod, data) when divisible; replicate otherwise."""
     axes = tuple(a for a in partition.BATCH_AXES if a in mesh.axis_names)
@@ -64,7 +83,8 @@ def _batch_sharding(mesh, shape_tuple):
 
 
 def build_cell(arch: str, shape_name: str, mesh, mode: str = "exact", attn: str = "xla",
-               pad_heads_to: int = 0, tp_bf16: bool = False, microbatches: int = 1):
+               pad_heads_to: int = 0, tp_bf16: bool = False, microbatches: int = 1,
+               prepared: bool = False):
     """Returns (step_fn, example_args, in_shardings, out_shardings)."""
     cfg = get_config(arch)
     if pad_heads_to:
@@ -80,6 +100,16 @@ def build_cell(arch: str, shape_name: str, mesh, mode: str = "exact", attn: str 
     specs = model.specs()
     param_sh, _ = partition.param_shardings(specs, mesh)
     aparams = model.abstract_params(jnp.bfloat16)
+    if prepared and mode != "exact" and shape.kind != "train":
+        # lower the serving fast path: weight banks pre-formatted by the
+        # backend registry (inference cells only — QAT trains raw weights)
+        from repro.core import prepare_params
+
+        aprep = jax.eval_shape(
+            lambda p: prepare_params(p, ctx.policy, mode, specs=specs), aparams
+        )
+        param_sh = _prepared_shardings(param_sh, aprep, mesh)
+        aparams = aprep
     batch = input_specs(cfg, shape)
     batch_sh = {k: _batch_sharding(mesh, v.shape) for k, v in batch.items()}
     repl = NamedSharding(mesh, P())
@@ -124,12 +154,16 @@ def build_cell(arch: str, shape_name: str, mesh, mode: str = "exact", attn: str 
 
 def run_cell(arch: str, shape_name: str, mesh_kind: str, mode: str = "exact",
              out_dir: Optional[str] = None, tag: str = "", attn: str = "xla",
-             pad_heads_to: int = 0, tp_bf16: bool = False, microbatches: int = 1) -> Dict:
+             pad_heads_to: int = 0, tp_bf16: bool = False, microbatches: int = 1,
+             prepared: bool = False) -> Dict:
     cfg = get_config(arch)
     shape = SHAPES[shape_name]
     ok, why = shape_applicable(cfg, shape)
+    if prepared and not tag:
+        tag = "prepared"
     rec: Dict = {
         "arch": arch, "shape": shape_name, "mesh": mesh_kind, "mode": mode, "tag": tag,
+        "prepared": prepared,
     }
     if not ok:
         rec.update(status="skip", reason=why)
@@ -141,7 +175,7 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, mode: str = "exact",
         with mesh:
             step, args, in_sh, out_sh = build_cell(
                 arch, shape_name, mesh, mode, attn=attn, pad_heads_to=pad_heads_to,
-                tp_bf16=tp_bf16, microbatches=microbatches,
+                tp_bf16=tp_bf16, microbatches=microbatches, prepared=prepared,
             )
             lowered = jax.jit(step, in_shardings=in_sh, out_shardings=out_sh).lower(*args)
             t_lower = time.time() - t0
@@ -149,6 +183,8 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, mode: str = "exact",
             t_compile = time.time() - t0 - t_lower
             mem = compiled.memory_analysis()
             cost = compiled.cost_analysis()
+            if isinstance(cost, (list, tuple)):  # older jax: one dict per device
+                cost = cost[0] if cost else {}
             hlo = compiled.as_text()
             costs = hlo_analysis.analyze(hlo)  # per-DEVICE program costs
         # persist the optimized HLO so perf iterations re-analyze offline
@@ -222,6 +258,9 @@ def main():
                     help="bf16 dot outputs (TP partial-sums all-reduce in bf16)")
     ap.add_argument("--microbatches", type=int, default=1,
                     help="gradient-accumulation microbatches inside train_step")
+    ap.add_argument("--prepared", action="store_true",
+                    help="lower inference cells with prepared weight banks "
+                         "(prepare_params; ignored for train shapes / exact mode)")
     ap.add_argument("--all", action="store_true", help="sweep every cell")
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
@@ -238,7 +277,8 @@ def main():
             for shape in shapes:
                 rec = run_cell(arch, shape, mesh_kind, args.mode, args.out, args.tag,
                                attn=args.attn, pad_heads_to=args.pad_heads_to,
-                               tp_bf16=args.tp_bf16, microbatches=args.microbatches)
+                               tp_bf16=args.tp_bf16, microbatches=args.microbatches,
+                               prepared=args.prepared)
                 failures += rec["status"] == "fail"
     raise SystemExit(1 if failures else 0)
 

@@ -26,7 +26,10 @@ def main(argv=None):
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--prompt-len", type=int, default=8)
-    ap.add_argument("--mode", choices=["exact", "carmen", "int8"], default="exact")
+    ap.add_argument("--mode", choices=["exact", "carmen", "int8", "kernel"], default="exact")
+    ap.add_argument("--per-call", action="store_true",
+                    help="skip prepare_params: re-quantize weights every step "
+                         "(the seed behaviour; for A/B benchmarking)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -44,6 +47,7 @@ def main(argv=None):
     server = BatchedServer(
         model, ctx, params, slots=args.slots,
         max_len=args.prompt_len + args.max_new + 2,
+        prepare_weights=not args.per_call,
     )
     rng = np.random.default_rng(0)
     reqs = [
@@ -54,8 +58,9 @@ def main(argv=None):
     results = server.run(reqs)
     dt = time.time() - t0
     total_tokens = sum(len(v) for v in results.values())
+    weights = "per-call" if args.per_call else "prepared"
     print(f"served {len(results)} requests, {total_tokens} tokens in {dt:.1f}s "
-          f"({total_tokens/max(dt,1e-9):.1f} tok/s, mode={args.mode})")
+          f"({total_tokens/max(dt,1e-9):.1f} tok/s, mode={args.mode}, {weights} weights)")
     for rid in sorted(results):
         print(f"  req {rid}: {results[rid][:8]}...")
     return results

@@ -234,12 +234,15 @@ def attention(p, x, cfg: ModelConfig, ctx: EngineContext, *, positions, name, ca
         cv = upd(cache["v"], v.astype(cache["v"].dtype), idx)
         s_max = ck.shape[1]
         k_pos = jnp.arange(s_max)
-        valid = k_pos[None, :] <= idx[:, None]  # (B, S) written so far (incl. now)
+        # per-query causal validity: query at position p sees keys <= p. With
+        # s == 1 this is the classic decode mask; with s > 1 (batched prefill
+        # writing a whole prompt at once) it is causal within the new block.
+        valid = k_pos[None, None, :] <= positions[:, :, None]  # (B, Sq, Smax)
         scale = 1.0 / math.sqrt(hd)
         ckr = jnp.repeat(ck, g, axis=2) if g > 1 else ck
         cvr = jnp.repeat(cv, g, axis=2) if g > 1 else cv
         scores = jnp.einsum("bqhd,bshd->bhqs", q.astype(jnp.float32), ckr.astype(jnp.float32))
-        scores = jnp.where(valid[:, None, None, :], scores * scale, -1e30)
+        scores = jnp.where(valid[:, None], scores * scale, -1e30)
         probs = jax.nn.softmax(scores, axis=-1)
         out = jnp.einsum("bhqs,bshd->bqhd", probs.astype(cvr.dtype), cvr)
         new_cache = {"k": ck, "v": cv, "index": idx + s}

@@ -172,7 +172,7 @@ def decode_step(params, tokens, cache, cfg: ModelConfig, ctx: EngineContext):
     h = jnp.take(params["embed"], tokens, axis=0).astype(cfg.compute_dtype)
     h = constrain(h, "batch", None, None)
     index = cache["self"]["index"][0]  # (B,)
-    positions = index[:, None]  # (B, 1)
+    positions = index[:, None] + jnp.arange(tokens.shape[1])[None, :]  # (B, S)
 
     def layer(h, xs):
         p, ck, cv, idx, xk, xv = xs

@@ -77,7 +77,8 @@ def mla_attention(p, x, cfg: ModelConfig, ctx: EngineContext, *, positions, name
         new_cache = {"c_kv": c_kv, "k_rope": k_rope, "index": idx + s}
         t = c_kv.shape[1]
         k_positions = jnp.arange(t)
-        valid = k_positions[None, :] <= idx[:, None]  # (B, T)
+        # per-query causal validity (s > 1 = batched prefill; see blocks.py)
+        valid = k_positions[None, None, :] <= positions[:, :, None]  # (B, S, T)
     else:
         new_cache = None
         t = s
@@ -98,7 +99,7 @@ def mla_attention(p, x, cfg: ModelConfig, ctx: EngineContext, *, positions, name
         scores = scores + jnp.einsum("bqhr,btr->bhqt", q_rope_i.astype(jnp.float32), k_rope_f)
         scores = scores * scale
         if valid is not None:
-            scores = jnp.where(valid[:, None, None, :], scores, -1e30)
+            scores = jnp.where(valid[:, None], scores, -1e30)
         else:
             mask = qpos_i[:, None] >= k_positions[None, :]
             scores = jnp.where(mask[None, None], scores, -1e30)

@@ -310,7 +310,10 @@ def forward(params, batch, cfg: ModelConfig, ctx: EngineContext, *, remat: bool 
 
 
 def _lm_head(params, h, cfg, ctx):
-    if cfg.tie_embeddings:
+    # prepared trees carry an explicit lm_head even when embeddings are tied
+    # (prepare_params materializes the transposed bank once), so decoding
+    # never re-quantizes the output head
+    if cfg.tie_embeddings and "lm_head" not in params:
         w = params["embed"].T
     else:
         w = params["lm_head"]
@@ -318,11 +321,16 @@ def _lm_head(params, h, cfg, ctx):
 
 
 def decode_step(params, tokens, cache, cfg: ModelConfig, ctx: EngineContext):
-    """One-token decode: tokens (B, 1) + cache -> (logits (B, 1, V), cache)."""
+    """Cached decode: tokens (B, S) + cache -> (logits (B, S, V), cache).
+
+    S = 1 is the classic one-token decode step; S > 1 writes a whole block
+    (batched prefill: the serving engine feeds the full prompt in one call
+    and scatters the resulting KV into its slot cache).
+    """
     h = jnp.take(params["embed"], tokens, axis=0).astype(cfg.compute_dtype)
     h = constrain(h, "batch", None, None)
     index = _cache_index(cache)  # (B,) per-row decode positions
-    positions = index[:, None]  # (B, 1) — rope broadcasts per row
+    positions = index[:, None] + jnp.arange(tokens.shape[1])[None, :]  # (B, S)
     h, new_caches, _ = _run_segments(params, h, cfg, ctx, positions, cache, remat=False)
     h = blocks.apply_norm(params["final_norm"], h, cfg)
     logits = _lm_head(params, h, cfg, ctx)

@@ -2,8 +2,13 @@
 
 Complements ``core/fxp.py`` (binary-point FxP — the silicon datapath regime):
 here scales are per-tensor/per-channel floats, weights are stored int8 once
-(serving), and the CORDIC depth knob maps to effective weight bits
-(``core.engine.int8_dot``).
+(serving), and the CORDIC depth knob maps to effective weight bits.
+
+The weight-bank mechanics now live in the int8 execution backend
+(``repro.core.backends.int8``) — ``quantize_params_int8`` and
+``QuantizedLinear`` are thin shims over it, kept for calibration tooling and
+API stability. New serving code should use ``repro.core.prepare_params``,
+which formats whole model trees per the precision policy.
 """
 from __future__ import annotations
 
@@ -12,7 +17,8 @@ from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
+
+from repro.core.backends.int8 import int8_dot, quantize_weight
 
 
 def fake_quant(x, bits: int = 8, axis: Optional[int] = None):
@@ -33,16 +39,14 @@ def quantize_params_int8(params, *, per_channel: bool = True):
 
     2D+ float leaves are quantized per output channel (last dim); small/1D
     leaves (norms, biases) stay float (criticality-pinned, like routers).
+    Delegates to the int8 backend's ``quantize_weight``.
     """
 
     def one(p):
         if not hasattr(p, "dtype") or p.dtype.kind != "f" or p.ndim < 2:
             return {"qvalue": p, "qscale": None}
-        axes = tuple(range(p.ndim - 1)) if per_channel else None
-        amax = jnp.max(jnp.abs(p.astype(jnp.float32)), axis=axes, keepdims=True)
-        scale = jnp.maximum(amax, 1e-8) / 127.0
-        q = jnp.clip(jnp.round(p.astype(jnp.float32) / scale), -127, 127).astype(jnp.int8)
-        return {"qvalue": q, "qscale": scale.astype(jnp.float32)}
+        q, scale = quantize_weight(p, per_channel=per_channel)
+        return {"qvalue": q, "qscale": scale}
 
     return jax.tree.map(one, params)
 
@@ -70,19 +74,18 @@ def calibrate_activation_scales(apply_fn, params, batches, taps) -> Dict[str, fl
 
 @dataclasses.dataclass
 class QuantizedLinear:
-    """Pre-quantized weight bank + int8 dot (serving fast path)."""
+    """Pre-quantized weight bank + int8 dot (single-layer serving fast path).
+
+    The whole-tree form of this is ``prepare_params(..., mode="int8")``.
+    """
 
     w_q: jax.Array  # int8 (in, out)
     scale: jax.Array  # (1, out)
 
     @staticmethod
     def from_float(w):
-        amax = jnp.max(jnp.abs(w.astype(jnp.float32)), axis=0, keepdims=True)
-        scale = jnp.maximum(amax, 1e-8) / 127.0
-        w_q = jnp.clip(jnp.round(w.astype(jnp.float32) / scale), -127, 127).astype(jnp.int8)
+        w_q, scale = quantize_weight(w)
         return QuantizedLinear(w_q, scale)
 
     def __call__(self, x, *, effective_bits: int = 8):
-        from repro.core.engine import int8_dot
-
         return int8_dot(x, self.w_q, effective_bits=effective_bits, w_scale=self.scale)

@@ -2,37 +2,58 @@
 
 The decode step is the unit the decode-shape cells lower (one new token against
 a seq_len-deep KV cache). The scheduler below implements simple continuous
-batching over a fixed slot count — enough to drive the end-to-end serving
-example honestly (admit/evict per step, per-slot positions), while the
-distributed story (cache shardings) lives in sharding/partition.py.
+batching over a fixed slot count — admit/evict per step, per-slot positions —
+with two serving fast paths on top:
+
+* **prepared weight banks**: on construction the server runs
+  ``prepare_params`` (quantize once), so carmen/int8/kernel decode performs
+  zero weight-side rounding or scale computation per step;
+* **batched prefill**: an admitted prompt runs through the model in ONE
+  multi-token forward (``decode_step`` with S = prompt length), and the
+  resulting KV rows are scattered into the slot cache — replacing the seed's
+  token-by-token Python loop. Greedy sampling happens on device inside the
+  jitted step, so only (B, 1) token ids cross the host boundary per step.
+
+SSM/hybrid/audio families keep the sequential prefill path (their recurrent
+state is carried step-by-step); the distributed story (cache shardings) lives
+in sharding/partition.py.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Optional
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import ModelConfig
-from repro.core import EngineContext
+from repro.core import EngineContext, prepare_params
 from repro.models import ModelApi
 
+# families whose decode caches are pure attention/MLA KV rows (scatterable);
+# recurrent-state families prefill sequentially
+_BATCHED_PREFILL_FAMILIES = ("dense", "vlm", "moe")
 
-def make_prefill_step(model: ModelApi, ctx: EngineContext):
-    def prefill_step(params, batch):
-        logits, _ = model.forward(params, batch, ctx)
-        return logits
+
+def make_decode_sample_step(model: ModelApi, ctx: EngineContext, *,
+                            temperature: float = 0.0):
+    """Decode + on-device sampling: only (B, 1) ids leave the device."""
+
+    def decode_sample(params, tokens, cache, key=None):
+        logits, cache = model.decode_step(params, tokens, cache, ctx)
+        return sample(logits, key, temperature=temperature), cache
+
+    return decode_sample
+
+
+def make_cached_prefill_step(model: ModelApi, ctx: EngineContext):
+    """Whole-prompt prefill: tokens (B, P) -> (first sampled token (B, 1), cache)."""
+
+    def prefill_step(params, tokens, cache):
+        logits, cache = model.decode_step(params, tokens, cache, ctx)
+        return jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32), cache
 
     return prefill_step
-
-
-def make_decode_step(model: ModelApi, ctx: EngineContext):
-    def decode_step(params, tokens, cache):
-        return model.decode_step(params, tokens, cache, ctx)
-
-    return decode_step
 
 
 def sample(logits, key, *, temperature: float = 0.0):
@@ -46,54 +67,86 @@ def sample(logits, key, *, temperature: float = 0.0):
 @dataclasses.dataclass
 class Request:
     rid: int
-    prompt: np.ndarray  # (P,) int32
+    prompt: np.ndarray  # (P,) int32, P >= 1
     max_new: int
     generated: Optional[List[int]] = None
 
 
+def _checked_prompt(req: Request) -> np.ndarray:
+    prompt = np.asarray(req.prompt, np.int32)
+    if prompt.size == 0:
+        raise ValueError(
+            f"request {req.rid}: empty prompt — prompts must carry at least "
+            "one token (seed with BOS)"
+        )
+    return prompt
+
+
 @dataclasses.dataclass
 class BatchedServer:
-    """Continuous batching over ``slots`` concurrent sequences (greedy)."""
+    """Continuous batching over ``slots`` concurrent sequences (greedy).
+
+    ``prepare_weights=True`` (default) formats the weight bank once through
+    the engine's backend registry; pass False to benchmark the per-call path.
+    """
 
     model: ModelApi
     ctx: EngineContext
     params: object
     slots: int = 4
     max_len: int = 256
+    prepare_weights: bool = True
 
     def __post_init__(self):
-        self.decode = jax.jit(make_decode_step(self.model, self.ctx))
+        if self.prepare_weights:
+            self.params = prepare_params(
+                self.params, self.ctx.policy, self.ctx.mode, specs=self.model.specs()
+            )
+        self.decode = jax.jit(make_decode_sample_step(self.model, self.ctx))
+        self.prefill = jax.jit(make_cached_prefill_step(self.model, self.ctx))
         self.cache = self.model.make_cache(self.slots, self.max_len, dtype=jnp.float32)
         self.active: Dict[int, Request] = {}
+        self.batched_prefill = self.model.cfg.family in _BATCHED_PREFILL_FAMILIES
 
-    def _reset_slot(self, slot: int):
-        """Zero this slot's per-row cache index: stale entries become invalid
-        (masked by index) and get overwritten as the new request fills in."""
+    def _scatter_slot(self, slot: int, row_cache):
+        """Write a freshly prefilled single-row cache into this slot's rows."""
 
-        def fix(v):
-            if hasattr(v, "dtype") and v.dtype == jnp.int32 and v.ndim >= 2:
-                return v.at[..., slot].set(0)
-            return v
+        def put(dst, src):
+            src = src.astype(dst.dtype)
+            if dst.shape == src.shape:  # slots == 1: whole-cache replacement
+                return src
+            diff = [i for i, (a, b) in enumerate(zip(dst.shape, src.shape)) if a != b]
+            assert len(diff) == 1, (dst.shape, src.shape)
+            return jax.lax.dynamic_update_slice_in_dim(dst, src, slot, diff[0])
 
-        self.cache = jax.tree.map(fix, self.cache)
+        self.cache = jax.tree.map(put, self.cache, row_cache)
 
     def _prefill_slot(self, slot: int, req: Request):
-        """Feed prompt tokens through the decode path into this slot's cache.
+        """Run the prompt into this slot's cache; sets ``req.generated``.
 
-        (Token-by-token teacher forcing — a dedicated batched prefill kernel is
-        a serving optimization, same math.)
+        Both paths prefill a FRESH single-row cache and scatter it into the
+        slot, so prefilling never touches other active slots' state: one
+        multi-token pass for attention families (compiles once per distinct
+        prompt length), a sequential token loop for recurrent state.
         """
-        self._reset_slot(slot)
-        tok = None
-        for t in req.prompt:
-            toks = np.zeros((self.slots, 1), np.int32)
-            toks[slot, 0] = t
-            logits, self.cache = self.decode(self.params, jnp.asarray(toks), self.cache)
-            tok = int(np.asarray(logits[slot, 0]).argmax())
+        prompt = _checked_prompt(req)
+        row = self.model.make_cache(1, self.max_len, dtype=jnp.float32)
+        if self.batched_prefill:
+            tok, row = self.prefill(self.params, jnp.asarray(prompt[None, :]), row)
+            tok = int(np.asarray(tok)[0, 0])
+        else:
+            for t in prompt:
+                sampled, row = self.decode(
+                    self.params, jnp.asarray([[t]], jnp.int32), row
+                )
+            tok = int(np.asarray(sampled)[0, 0])
+        self._scatter_slot(slot, row)
         req.generated = [tok]
 
     def run(self, requests: List[Request]) -> Dict[int, List[int]]:
         """Serve requests to completion; returns rid -> generated tokens."""
+        for req in requests:  # reject before any state mutates
+            _checked_prompt(req)
         queue = list(requests)
         results: Dict[int, List[int]] = {}
         slot_of: Dict[int, int] = {}
@@ -103,16 +156,22 @@ class BatchedServer:
                 req = queue.pop(0)
                 slot = free.pop(0)
                 self._prefill_slot(slot, req)
+                if len(req.generated) >= req.max_new:  # prefill already done
+                    results[req.rid] = req.generated
+                    free.append(slot)
+                    continue
                 self.active[req.rid] = req
                 slot_of[req.rid] = slot
+            if not self.active:
+                continue
             toks = np.zeros((self.slots, 1), np.int32)
             for rid, req in self.active.items():
                 toks[slot_of[rid], 0] = req.generated[-1]
-            logits, self.cache = self.decode(self.params, jnp.asarray(toks), self.cache)
+            sampled, self.cache = self.decode(self.params, jnp.asarray(toks), self.cache)
+            sampled = np.asarray(sampled)
             done = []
             for rid, req in self.active.items():
-                nxt = int(np.asarray(logits[slot_of[rid], 0]).argmax())
-                req.generated.append(nxt)
+                req.generated.append(int(sampled[slot_of[rid], 0]))
                 if len(req.generated) >= req.max_new:
                     done.append(rid)
             for rid in done:

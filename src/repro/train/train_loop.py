@@ -18,10 +18,22 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.core import EngineContext
+from repro.core import EngineContext, PreparedWeight
 from repro.models import ModelApi
 
 from . import optimizer as opt
+
+
+def _check_trainable(params):
+    """QAT trains raw float weights through the traced per-call quantization
+    path; prepared weight banks (``prepare_params``) are inference-only."""
+    leaves = jax.tree.leaves(params, is_leaf=lambda x: isinstance(x, PreparedWeight))
+    if any(isinstance(l, PreparedWeight) for l in leaves):
+        raise ValueError(
+            "train_step received prepared weight banks — training (QAT) "
+            "requires raw float params; prepare_params is for inference "
+            "(use make_eval_step to evaluate prepared trees)"
+        )
 
 
 @dataclasses.dataclass(frozen=True)
@@ -69,6 +81,7 @@ def make_train_step(model: ModelApi, ctx: EngineContext, tcfg: TrainConfig):
     grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
 
     def train_step(params, opt_state, batch):
+        _check_trainable(params)
         if tcfg.microbatches > 1:
             mb = tcfg.microbatches
 
@@ -97,3 +110,16 @@ def make_train_step(model: ModelApi, ctx: EngineContext, tcfg: TrainConfig):
         return params, opt_state, metrics
 
     return train_step
+
+
+def make_eval_step(model: ModelApi, ctx: EngineContext,
+                   tcfg: Optional[TrainConfig] = None):
+    """(params, batch) -> metrics; gradient-free, so prepared weight banks
+    (``prepare_params``) evaluate on their serving fast path."""
+    loss_fn = make_loss_fn(model, ctx, tcfg or TrainConfig(remat=False))
+
+    def eval_step(params, batch):
+        loss, metrics = loss_fn(params, batch)
+        return dict(metrics, loss=loss)
+
+    return eval_step

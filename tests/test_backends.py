@@ -1,0 +1,210 @@
+"""Prepared-weight execution backends: quantize once, serve fast.
+
+The contract under test: after ``prepare_params`` the forward performs zero
+weight-side rounding/scale computation, and the results are *bit-identical*
+to the per-call paths at the dot level — across depths and FxP formats.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.core import (
+    EngineContext,
+    FXP8,
+    FXP16,
+    PrecisionPolicy,
+    PreparedWeight,
+    full_depth,
+    prepare_params,
+)
+from repro.core.backends import get_backend, resolve
+from repro.models import get_model
+from repro.serve.engine import BatchedServer, Request
+
+DEPTHS = {FXP8: (4, 6, full_depth(FXP8)), FXP16: (4, 6, full_depth(FXP16))}
+
+
+def _xw(rng, m=8, k=64, n=16):
+    x = rng.uniform(-1, 1, (m, k)).astype(np.float32)
+    w = rng.uniform(-1, 1, (k, n)).astype(np.float32)
+    return x, w
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+
+def test_registry_serves_all_modes():
+    for mode in ("exact", "carmen", "int8", "kernel"):
+        assert get_backend(mode).name == mode
+    with pytest.raises(ValueError, match="unknown engine mode"):
+        get_backend("fp4")
+
+
+def test_prepared_leaf_pins_backend(rng):
+    """A prepared bank carries its execution path regardless of ctx.mode."""
+    x, w = _xw(rng)
+    pol = PrecisionPolicy.accurate(FXP8)
+    pw = get_backend("carmen").prepare(jnp.asarray(w), pol.for_layer("n"))
+    assert resolve(pw, "int8").name == "carmen"
+    assert resolve(jnp.asarray(w), "int8").name == "int8"
+
+
+# ---------------------------------------------------------------------------
+# dot-level bit parity: prepared == per-call
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("fmt", [FXP8, FXP16], ids=str)
+@pytest.mark.parametrize("mode", ["carmen", "int8"])
+def test_prepared_dot_bit_identical(mode, fmt, rng):
+    x, w = _xw(rng)
+    for depth in DEPTHS[fmt]:
+        pol = PrecisionPolicy.uniform(fmt, depth)
+        ctx = EngineContext(mode=mode, policy=pol, compute_dtype=jnp.float32)
+        per_call = np.asarray(ctx.dot(x, w, name="mlp.up"))
+        pw = get_backend(mode).prepare(jnp.asarray(w), pol.for_layer("mlp.up"))
+        prepared = np.asarray(ctx.dot(x, pw, name="mlp.up"))
+        np.testing.assert_array_equal(per_call, prepared, err_msg=f"{mode} d={depth}")
+
+
+def test_prepared_kernel_dot_bit_identical(rng):
+    x, w = _xw(rng, m=4, k=32, n=16)
+    pol = PrecisionPolicy.uniform(FXP8, 5)
+    ctx = EngineContext(mode="kernel", policy=pol, compute_dtype=jnp.float32)
+    per_call = np.asarray(ctx.dot(x, w, name="n"))
+    pw = get_backend("kernel").prepare(jnp.asarray(w), pol.for_layer("n"))
+    prepared = np.asarray(ctx.dot(x, pw, name="n"))
+    np.testing.assert_array_equal(per_call, prepared)
+
+
+def test_prepared_dot_does_no_weight_side_work(rng):
+    """The prepared int8 dot must consume the stored scale, not recompute it:
+    hand it a deliberately wrong scale and the output must follow the lie."""
+    x, w = _xw(rng)
+    pol = PrecisionPolicy.accurate(FXP8)
+    ctx = EngineContext(mode="int8", policy=pol, compute_dtype=jnp.float32)
+    pw = get_backend("int8").prepare(jnp.asarray(w), pol.for_layer("n"))
+    doubled = PreparedWeight(pw.data, pw.scale * 2.0, pw.backend, pw.meta)
+    base = np.asarray(ctx.dot(x, pw, name="n"))
+    lied = np.asarray(ctx.dot(x, doubled, name="n"))
+    np.testing.assert_allclose(lied, 2.0 * base, rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# prepare_params: tree lifecycle
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = reduced(get_config("olmo-1b"))
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _prepared_leaves(tree):
+    return [
+        l
+        for l in jax.tree.leaves(tree, is_leaf=lambda x: isinstance(x, PreparedWeight))
+        if isinstance(l, PreparedWeight)
+    ]
+
+
+def test_prepare_params_structure(small_model):
+    cfg, model, params = small_model
+    pol = PrecisionPolicy.accurate(FXP8)
+    prep = prepare_params(params, pol, "int8", specs=model.specs())
+    seg = prep["seg0_dense"]
+    # engine-routed weights become prepared banks (stacked layer axis intact)
+    for group, name in (("attn", "wq"), ("attn", "wo"), ("mlp", "up"), ("mlp", "down")):
+        leaf = seg[group][name]
+        assert isinstance(leaf, PreparedWeight), (group, name)
+        assert leaf.data.dtype == jnp.int8
+        assert leaf.data.shape == params["seg0_dense"][group][name].shape
+        assert leaf.scale.shape[0] == cfg.num_layers  # per-layer scales (scan xs)
+    # criticality-pinned leaves stay float
+    assert not _prepared_leaves(seg["attn_norm"])
+    assert not _prepared_leaves(prep["final_norm"])
+    assert not isinstance(prep["embed"], PreparedWeight)
+    # tied embeddings get an explicit prepared head
+    assert cfg.tie_embeddings and isinstance(prep["lm_head"], PreparedWeight)
+
+
+def test_prepare_params_exact_is_passthrough(small_model):
+    _, model, params = small_model
+    prep = prepare_params(params, None, "exact", specs=model.specs())
+    assert not _prepared_leaves(prep)
+
+
+def test_prepare_params_idempotent(small_model):
+    _, model, params = small_model
+    pol = PrecisionPolicy.accurate(FXP8)
+    prep = prepare_params(params, pol, "carmen", specs=model.specs())
+    again = prepare_params(prep, pol, "carmen", specs=model.specs())
+    for a, b in zip(_prepared_leaves(prep), _prepared_leaves(again)):
+        assert a.data is b.data  # already-prepared leaves pass through
+
+
+@pytest.mark.parametrize("mode", ["carmen", "int8"])
+def test_prepared_forward_matches_per_call(small_model, mode):
+    cfg, model, params = small_model
+    pol = PrecisionPolicy.accurate(FXP8)
+    ctx = EngineContext(mode=mode, policy=pol, compute_dtype=jnp.float32)
+    prep = prepare_params(params, pol, mode, specs=model.specs())
+    batch = {"tokens": jnp.asarray(np.arange(16, dtype=np.int32).reshape(2, 8))}
+    lg_pc, _ = model.forward(params, batch, ctx)
+    lg_pr, _ = model.forward(prep, batch, ctx)
+    if mode == "carmen":  # no scale epilogue -> bitwise through the whole stack
+        np.testing.assert_array_equal(np.asarray(lg_pc), np.asarray(lg_pr))
+    else:  # int8: XLA may reassociate the (tiny) scale multiplies inside scan
+        np.testing.assert_allclose(np.asarray(lg_pc), np.asarray(lg_pr), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# serving integration
+# ---------------------------------------------------------------------------
+
+
+def test_server_prepared_matches_per_call(small_model):
+    _, model, params = small_model
+    ctx = EngineContext(
+        mode="carmen", policy=PrecisionPolicy.accurate(FXP16), compute_dtype=jnp.float32
+    )
+    prompt = np.array([5, 17, 3], np.int32)
+    reqs = lambda: [Request(0, prompt, 5), Request(1, prompt, 5)]
+    fast = BatchedServer(model, ctx, params, slots=2, max_len=32).run(reqs())
+    slow = BatchedServer(
+        model, ctx, params, slots=2, max_len=32, prepare_weights=False
+    ).run(reqs())
+    assert fast == slow
+
+
+def test_server_rejects_empty_prompt(small_model):
+    _, model, params = small_model
+    ctx = EngineContext(mode="exact", compute_dtype=jnp.float32)
+    server = BatchedServer(model, ctx, params, slots=1, max_len=16)
+    with pytest.raises(ValueError, match="empty prompt"):
+        server.run([Request(0, np.array([], np.int32), 4)])
+
+
+def test_train_step_rejects_prepared_params(small_model):
+    from repro.train import optimizer as opt
+    from repro.train.train_loop import TrainConfig, make_train_step
+
+    _, model, params = small_model
+    pol = PrecisionPolicy.accurate(FXP8)
+    ctx = EngineContext(mode="carmen", policy=pol, compute_dtype=jnp.float32)
+    prep = prepare_params(params, pol, "carmen", specs=model.specs())
+    step = make_train_step(model, ctx, TrainConfig(remat=False))
+    state = opt.init_state(params)
+    batch = {
+        "tokens": jnp.zeros((2, 8), jnp.int32),
+        "targets": jnp.zeros((2, 8), jnp.int32),
+    }
+    with pytest.raises(ValueError, match="prepared weight banks"):
+        step(prep, state, batch)

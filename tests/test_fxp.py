@@ -1,7 +1,7 @@
 """Property tests for the fixed-point substrate."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import FXP8, FXP16, FxPFormat, dequantize, quantize
 from repro.core.fxp import requantize, saturate

@@ -1,8 +1,8 @@
 """AAD pooling unit."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
-from hypothesis.extra.numpy import arrays
+from _hypothesis_compat import given, settings, st
+from _hypothesis_compat import arrays
 
 from repro.core import aad_pool, aad_pool_1d, avg_pool, max_pool
 

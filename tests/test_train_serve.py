@@ -118,6 +118,34 @@ def test_batched_server_matches_sequential_decode():
     assert results[0] == gen
 
 
+def test_max_new_one_returns_single_token():
+    """max_new=1 is satisfied by the prefill token alone — no extra decode."""
+    cfg, model, params, _ = _setup()
+    server = BatchedServer(model, CTX, params, slots=1, max_len=32)
+    out = server.run([Request(0, np.array([5, 17, 3], np.int32), 1)])
+    assert len(out[0]) == 1
+
+
+def test_sequential_prefill_isolated_from_active_slots():
+    """Recurrent-state families prefill into a fresh row cache: admitting a
+    request must never advance other active slots' state (two identical
+    prompts across slots generate identically, matching a dedicated server)."""
+    from repro.configs import get_config, reduced
+
+    cfg = reduced(get_config("mamba2-780m"))
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    p = np.array([5, 17, 3], np.int32)
+    server = BatchedServer(model, CTX, params, slots=2, max_len=32)
+    assert not server.batched_prefill  # ssm takes the sequential path
+    out = server.run([Request(0, p, 4), Request(1, p, 4)])
+    assert out[0] == out[1]
+    ref = BatchedServer(model, CTX, params, slots=1, max_len=32).run(
+        [Request(0, p, 4)]
+    )
+    assert out[0] == ref[0]
+
+
 def test_slot_reuse_after_eviction():
     """A new request admitted into a used slot must not see stale cache."""
     cfg, model, params, _ = _setup()
