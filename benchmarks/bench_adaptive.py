@@ -1,0 +1,166 @@
+"""Runtime-adaptive serving benchmark: cycles saved vs accuracy across load.
+
+For each load level (request count against a fixed slot count) the same
+workload is served twice — once all-accurate (static prepared bank), once
+through the runtime-adaptive subsystem (multi-point bank + mode controller)
+— and the record captures the trade the paper's §III makes measurable
+end-to-end: estimated MAC-cycle savings, mode occupancy, switch counts,
+throughput, and greedy token agreement (teacher-forced overall + on
+high-confidence tokens, split at the median accurate-run top-2 margin).
+
+    PYTHONPATH=src python -m benchmarks.bench_adaptive --arch olmo-1b \
+        --loads 4,12 --max-new 16
+
+``--smoke`` shrinks the workload for CI and writes the same JSON shape to
+``artifacts/bench/BENCH_adaptive.json``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCHS, get_config, reduced as reduce_cfg
+from repro.core import EngineContext, FXP8, FXP16, PrecisionPolicy
+from repro.models import get_model
+from repro.runtime import (
+    ControllerConfig,
+    ModeController,
+    build_bank,
+    default_points,
+    teacher_forced_agreement,
+)
+from repro.serve.engine import BatchedServer, Request
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "artifacts", "bench")
+
+
+def make_requests(cfg, n, *, prompt_len, max_new, seed=1):
+    rng = np.random.default_rng(seed)
+    return [
+        Request(i, rng.integers(0, cfg.vocab_size, prompt_len).astype(np.int32), max_new)
+        for i in range(n)
+    ]
+
+
+def bench_load(model, cfg, params, bank, n_requests, *, slots, prompt_len,
+               max_new, cycle_budget, fmt):
+    ctx = EngineContext(mode=bank.mode, policy=PrecisionPolicy.accurate(fmt),
+                        compute_dtype=jnp.float32)
+    max_len = prompt_len + max_new + 2
+    workload = lambda: make_requests(cfg, n_requests, prompt_len=prompt_len,
+                                     max_new=max_new)
+
+    ref_reqs = workload()
+    # the bank already holds the all-accurate tree — no second prepare pass
+    ref_server = BatchedServer(model, ctx, bank.tree(bank.reference), slots=slots,
+                               max_len=max_len, prepare_weights=False)
+    t0 = time.perf_counter()
+    ref_out = ref_server.run(ref_reqs)
+    ref_dt = time.perf_counter() - t0
+
+    controller = ModeController(bank, ControllerConfig(cycle_budget=cycle_budget))
+    adp_server = BatchedServer(model, ctx, params, slots=slots, max_len=max_len,
+                               controller=controller)
+    adp_reqs = workload()
+    t0 = time.perf_counter()
+    adp_out = adp_server.run(adp_reqs)
+    adp_dt = time.perf_counter() - t0
+    tele = adp_server.telemetry.summary()
+
+    seq_agree = float(np.mean([
+        np.mean(np.array(adp_out[r]) == np.array(ref_out[r])) for r in ref_out
+    ]))
+    overall, high_conf, thr, _ = teacher_forced_agreement(
+        model, ctx, bank.tree(bank.names[0]), ref_reqs, ref_out,
+        {r.rid: r.margins for r in ref_reqs},
+    )
+    gen_toks = sum(len(v) for v in ref_out.values())  # decode tokens only
+    return {
+        "requests": n_requests,
+        "queue_pressure": round(n_requests / slots, 2),
+        "accurate_tok_s": round(gen_toks / max(ref_dt, 1e-9), 1),
+        "adaptive_tok_s": round(gen_toks / max(adp_dt, 1e-9), 1),
+        "est_cycle_savings_frac": tele["est_cycle_savings_frac"],
+        "mode_occupancy": tele["mode_occupancy"],
+        "switches": tele["switches"],
+        "sequence_agreement": round(seq_agree, 4),
+        "greedy_agreement_overall": round(overall, 4),
+        "greedy_agreement_high_conf": round(high_conf, 4),
+        "margin_threshold": round(thr, 4),
+    }
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=sorted(ARCHS), default="olmo-1b")
+    ap.add_argument("--full-size", action="store_true",
+                    help="benchmark the unreduced config")
+    ap.add_argument("--mode", choices=["carmen", "int8", "kernel"], default="carmen")
+    ap.add_argument("--slots", type=int, default=3)
+    ap.add_argument("--prompt-len", type=int, default=6)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--loads", default="4,12",
+                    help="comma-separated request counts (load levels)")
+    ap.add_argument("--cycle-budget", type=float, default=0.75)
+    ap.add_argument("--fxp8", action="store_true",
+                    help="FxP8 operand ladder (default FxP16)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny CI workload (reduced model, short generations)")
+    ap.add_argument("--out", default=os.path.join(ARTIFACTS, "BENCH_adaptive.json"))
+    args = ap.parse_args(argv)
+
+    if args.smoke:
+        args.full_size = False
+        args.loads = "2,6"
+        args.max_new = 8
+        args.slots = 2
+
+    cfg = get_config(args.arch)
+    if not args.full_size:
+        cfg = reduce_cfg(cfg)
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    fmt = FXP8 if args.fxp8 else FXP16
+    bank = build_bank(params, args.mode, default_points(fmt, hifi_fmt=None),
+                      specs=model.specs())
+
+    record = {
+        "arch": args.arch,
+        "reduced": not args.full_size,
+        "mode": args.mode,
+        "fmt": f"FXP{fmt.bits}",
+        "slots": args.slots,
+        "max_new": args.max_new,
+        "cycle_budget": args.cycle_budget,
+        "backend": jax.default_backend(),
+        "bank": {
+            "points": list(bank.names),
+            "rel_cycles": {n: round(bank.rel_cycles(n), 4) for n in bank.names},
+            "shared_leaves": bank.shared_leaves,
+            "unique_leaves": bank.unique_leaves,
+        },
+        "loads": [],
+    }
+    for n in (int(x) for x in args.loads.split(",")):
+        rec = bench_load(model, cfg, params, bank, n, slots=args.slots,
+                         prompt_len=args.prompt_len, max_new=args.max_new,
+                         cycle_budget=args.cycle_budget, fmt=fmt)
+        record["loads"].append(rec)
+
+    payload = json.dumps(record, indent=1)
+    print(payload)
+    if args.out:
+        os.makedirs(os.path.dirname(args.out), exist_ok=True)
+        with open(args.out, "w") as f:
+            f.write(payload + "\n")
+    return record
+
+
+if __name__ == "__main__":
+    main()

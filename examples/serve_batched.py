@@ -1,12 +1,23 @@
 """Continuous-batching inference under the CARMEN quantized engine.
 
-Serves a batch of requests through the decode engine three times — exact
-(FP32 baseline), carmen (paper-faithful FxP8), int8 (TPU production path) —
-and reports tokens/s plus generation agreement vs the baseline: the
+Default run serves a batch of requests through the decode engine three times
+— exact (FP32 baseline), carmen (paper-faithful FxP16), int8 (TPU production
+path) — and reports tokens/s plus generation agreement vs the baseline: the
 end-to-end incarnation of the paper's <2% accuracy-loss claim.
 
-Run:  PYTHONPATH=src python examples/serve_batched.py
+``--adaptive`` instead demonstrates the runtime-adaptive precision subsystem
+(``repro.runtime``) on a mixed workload: a multi-point weight bank (approx /
+accurate execution points prepared once, pinned layers shared) and a mode
+controller that switches the execution point per decode step from live
+telemetry — queue pressure while the request backlog exceeds the slot count,
+logit-margin confidence, and a MAC-cycle budget. Prints mode occupancy,
+switch count, estimated cycle savings vs all-accurate serving, and greedy
+token agreement on high-confidence tokens (teacher-forced, so one flipped
+token does not cascade into the metric).
+
+Run:  PYTHONPATH=src python examples/serve_batched.py [--adaptive]
 """
+import argparse
 import time
 
 import jax
@@ -18,33 +29,128 @@ from repro.core import EngineContext, FXP8, FXP16, PrecisionPolicy
 from repro.models import get_model
 from repro.serve.engine import BatchedServer, Request
 
-cfg = reduced(get_config("qwen3-8b"))
-model = get_model(cfg)
-params = model.init(jax.random.PRNGKey(0))
-rng = np.random.default_rng(1)
-requests = [
-    Request(i, rng.integers(0, cfg.vocab_size, 6).astype(np.int32), 12) for i in range(6)
-]
 
-results = {}
-for mode, ctx in (
-    ("exact", EngineContext(mode="exact", compute_dtype=jnp.float32)),
-    ("carmen-fxp16", EngineContext(mode="carmen", policy=PrecisionPolicy.accurate(FXP16),
-                                   compute_dtype=jnp.float32)),
-    ("int8", EngineContext(mode="int8", policy=PrecisionPolicy.accurate(FXP8),
-                           compute_dtype=jnp.float32)),
-):
-    server = BatchedServer(model, ctx, params, slots=3, max_len=32)
+def compare_modes(cfg, model, params, requests):
+    results = {}
+    for mode, ctx in (
+        ("exact", EngineContext(mode="exact", compute_dtype=jnp.float32)),
+        ("carmen-fxp16", EngineContext(mode="carmen", policy=PrecisionPolicy.accurate(FXP16),
+                                       compute_dtype=jnp.float32)),
+        ("int8", EngineContext(mode="int8", policy=PrecisionPolicy.accurate(FXP8),
+                               compute_dtype=jnp.float32)),
+    ):
+        server = BatchedServer(model, ctx, params, slots=3, max_len=32)
+        t0 = time.time()
+        out = server.run([Request(r.rid, r.prompt, r.max_new) for r in requests])
+        dt = time.time() - t0
+        toks = sum(len(v) for v in out.values())
+        results[mode] = out
+        print(f"{mode:13s}: {toks} tokens in {dt:5.1f}s ({toks/dt:6.1f} tok/s)")
+
+    base = results["exact"]
+    for mode in ("carmen-fxp16", "int8"):
+        agree = np.mean([
+            np.mean(np.array(results[mode][rid]) == np.array(base[rid])) for rid in base
+        ])
+        print(f"token agreement {mode} vs exact: {agree:.1%}")
+
+
+def adaptive_demo(cfg, model, params, *, slots=3, requests=12, max_new=16,
+                  cycle_budget=0.75):
+    from repro.runtime import (
+        ControllerConfig, ModeController, build_bank, default_points,
+        teacher_forced_agreement,
+    )
+
+    fmt = FXP16  # approx depth 8 vs full depth 13: ~36% fewer MAC cycles
+    ctx = EngineContext(mode="carmen", policy=PrecisionPolicy.accurate(fmt),
+                        compute_dtype=jnp.float32)
+
+    def mixed_workload():
+        rng = np.random.default_rng(1)  # fresh stream: both runs serve the SAME workload
+        reqs = []
+        for i in range(requests):
+            plen = int(rng.integers(4, 9))
+            prompt = rng.integers(0, cfg.vocab_size, plen).astype(np.int32)
+            # a couple of sampled requests ride along (temperature plumbing);
+            # greedy requests carry the matched-output comparison
+            temp = 0.8 if i % 6 == 5 else 0.0
+            reqs.append(Request(i, prompt, max_new, temperature=temp, seed=i))
+        return reqs
+
+    bank = build_bank(params, "carmen", default_points(fmt, hifi_fmt=None),
+                      specs=model.specs())
+
+    # all-accurate reference run, served from the bank's own accurate tree
+    ref_server = BatchedServer(model, ctx, bank.tree("accurate"), slots=slots,
+                               max_len=32, prepare_weights=False)
+    ref_reqs = mixed_workload()
     t0 = time.time()
-    out = server.run([Request(r.rid, r.prompt, r.max_new) for r in requests])
-    dt = time.time() - t0
-    toks = sum(len(v) for v in out.values())
-    results[mode] = out
-    print(f"{mode:13s}: {toks} tokens in {dt:5.1f}s ({toks/dt:6.1f} tok/s)")
+    ref_out = ref_server.run(ref_reqs)
+    ref_dt = time.time() - t0
+    ref_margins = {r.rid: r.margins for r in ref_reqs}
 
-base = results["exact"]
-for mode in ("carmen-fxp16", "int8"):
-    agree = np.mean([
-        np.mean(np.array(results[mode][rid]) == np.array(base[rid])) for rid in base
-    ])
-    print(f"token agreement {mode} vs exact: {agree:.1%}")
+    # adaptive run: multi-point bank + mode controller
+    controller = ModeController(bank, ControllerConfig(cycle_budget=cycle_budget))
+    adp_server = BatchedServer(model, ctx, params, slots=slots, max_len=32,
+                               controller=controller)
+    t0 = time.time()
+    adp_server.run(mixed_workload())
+    adp_dt = time.time() - t0
+    tele = adp_server.telemetry.summary()
+
+    gen_tokens = sum(len(v) for v in ref_out.values())
+    print(f"bank: points={bank.names}, shared leaves "
+          f"{bank.shared_leaves}/{bank.unique_leaves}, rel cycles "
+          f"{ {n: round(bank.rel_cycles(n), 3) for n in bank.names} }")
+    print(f"all-accurate: {gen_tokens} generated tokens in {ref_dt:.1f}s; "
+          f"adaptive: {adp_dt:.1f}s")
+    print(f"mode occupancy (token-weighted): {tele['mode_occupancy']}")
+    print(f"controller switches: {tele['switches']} "
+          f"(queue pressure while backlog > slots, then margin/budget steering)")
+    print(f"estimated MAC-cycle savings vs all-accurate: "
+          f"{tele['est_cycle_savings_frac']:.1%}")
+
+    greedy = [r for r in ref_reqs if r.temperature <= 0.0]
+    overall, hi, thr, n_hi = teacher_forced_agreement(
+        model, ctx, bank.tree(bank.names[0]), greedy, ref_out, ref_margins
+    )
+    print(f"approx-point greedy agreement: {overall:.1%} overall, "
+          f"{hi:.1%} on {n_hi} high-confidence tokens (margin >= {thr:.2f})")
+    assert tele["switches"] >= 1, "controller never switched modes"
+    assert tele["est_cycle_savings_frac"] >= 0.25, "savings below the 25% bar"
+    return tele
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--adaptive", action="store_true",
+                    help="runtime-adaptive precision demo (bank + controller)")
+    ap.add_argument("--arch", default=None,
+                    help="default: olmo-1b (adaptive) / qwen3-8b (mode comparison)")
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--slots", type=int, default=3)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--cycle-budget", type=float, default=0.75)
+    args = ap.parse_args(argv)
+
+    arch = args.arch or ("olmo-1b" if args.adaptive else "qwen3-8b")
+    cfg = reduced(get_config(arch))
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    if args.adaptive:
+        adaptive_demo(cfg, model, params, slots=args.slots,
+                      requests=args.requests, max_new=args.max_new,
+                      cycle_budget=args.cycle_budget)
+    else:
+        rng = np.random.default_rng(1)
+        reqs = [
+            Request(i, rng.integers(0, cfg.vocab_size, 6).astype(np.int32), 12)
+            for i in range(6)
+        ]
+        compare_modes(cfg, model, params, reqs)
+
+
+if __name__ == "__main__":
+    main()

@@ -11,7 +11,14 @@ from .cordic import (
 from .activations import AF_INDEX, AF_NAMES, af_ref, cordic_softmax, multi_af, multi_af_float
 from .mac import carmen_matmul_fast, cordic_dot, cordic_matmul, mac_cycles
 from .engine import EngineContext, PreparedWeight, carmen_dot, int8_dot, prepare_params
-from .precision_policy import LayerPrecision, PrecisionPolicy, assign_depths, sensitivity_scan
+from .precision_policy import (
+    CRITICAL_KEYWORDS,
+    LayerPrecision,
+    PrecisionPolicy,
+    assign_depths,
+    pin_critical,
+    sensitivity_scan,
+)
 from .pooling import aad_pool, aad_pool_1d, avg_pool, max_pool
 from .normalization import layernorm, l2norm, nonparametric_ln, qk_norm, rmsnorm
 
@@ -22,7 +29,8 @@ __all__ = [
     "AF_INDEX", "AF_NAMES", "af_ref", "cordic_softmax", "multi_af", "multi_af_float",
     "carmen_matmul_fast", "cordic_dot", "cordic_matmul", "mac_cycles",
     "EngineContext", "PreparedWeight", "carmen_dot", "int8_dot", "prepare_params",
-    "LayerPrecision", "PrecisionPolicy", "assign_depths", "sensitivity_scan",
+    "CRITICAL_KEYWORDS", "LayerPrecision", "PrecisionPolicy", "assign_depths",
+    "pin_critical", "sensitivity_scan",
     "aad_pool", "aad_pool_1d", "avg_pool", "max_pool",
     "layernorm", "l2norm", "nonparametric_ln", "qk_norm", "rmsnorm",
 ]

@@ -29,8 +29,8 @@ from .kernel import KernelBackend
 
 __all__ = [
     "Backend", "PreparedWeight", "get_backend", "register", "resolve",
-    "prepare_params", "carmen_dot", "int8_dot", "sd_round_traced",
-    "effective_bits", "quantize_weight", "unit_fmt",
+    "prepare_params", "iter_dot_weights", "carmen_dot", "int8_dot",
+    "sd_round_traced", "effective_bits", "quantize_weight", "unit_fmt",
 ]
 
 _REGISTRY: Dict[str, Backend] = {}
@@ -121,7 +121,60 @@ def _stacked_axes(keys, spec) -> int:
     return 0
 
 
-def prepare_params(params, policy: Optional[PrecisionPolicy], mode: str, *, specs=None):
+def _spec_index(specs):
+    """path-keys tuple -> ParamSpec for stacked-axis identification."""
+    if specs is None:
+        return {}
+    from repro.models.params import is_spec
+
+    flat_specs, _ = jax.tree_util.tree_flatten_with_path(specs, is_leaf=is_spec)
+    return {tuple(_path_keys(p)): s for p, s in flat_specs}
+
+
+def _classify(keys, leaf, spec):
+    """(policy_name, stacked_axes, in_axes) of an engine-routed matmul weight,
+    or None when the leaf never reaches ``EngineContext.dot``."""
+    if not _eligible(keys) or not hasattr(leaf, "ndim"):
+        return None
+    stacked = _stacked_axes(keys, spec)
+    if leaf.ndim - stacked < 2:
+        return None
+    # contraction axes of the dot-time 2D view: weights are (in..., out...)
+    # with a single input axis everywhere except wo, whose leading
+    # (heads, head_dim) axes fold into the contraction
+    in_axes = leaf.ndim - stacked - 1 if keys[-1] == "wo" else 1
+    return _policy_name(keys), stacked, in_axes
+
+
+def iter_dot_weights(params, *, specs=None):
+    """Yield ``(keys, policy_name, leaf, stacked_axes, in_axes)`` for every
+    weight leaf in ``params`` that reaches ``EngineContext.dot``.
+
+    The single source of truth for "which leaves does the engine multiply":
+    ``prepare_params`` formats exactly these leaves, the runtime cycle model
+    (``repro.runtime.telemetry``) costs exactly these leaves, and the serving
+    calibration scan (``repro.runtime.calibrate``) perturbs exactly these
+    layer names. The tied-embedding lm_head is synthesized by callers (it has
+    no leaf of its own in a tied tree — except in prepared trees, where the
+    materialized head leaf IS yielded).
+
+    Works on raw and prepared trees alike: :class:`PreparedWeight` nodes are
+    treated as leaves (not descended into data/scale children).
+    """
+    spec_of = _spec_index(specs)
+    flat, _ = jax.tree_util.tree_flatten_with_path(
+        params, is_leaf=lambda x: isinstance(x, PreparedWeight)
+    )
+    for path, leaf in flat:
+        keys = _path_keys(path)
+        info = _classify(keys, leaf, spec_of.get(tuple(keys)))
+        if info is not None:
+            name, stacked, in_axes = info
+            yield keys, name, leaf, stacked, in_axes
+
+
+def prepare_params(params, policy: Optional[PrecisionPolicy], mode: str, *,
+                   specs=None, memo: Optional[Dict] = None):
     """Materialize per-layer prepared weight banks for serving.
 
     Walks ``params`` and replaces every engine-routed matmul weight with the
@@ -138,39 +191,31 @@ def prepare_params(params, policy: Optional[PrecisionPolicy], mode: str, *, spec
     Tied-embedding models get an explicit prepared ``lm_head`` entry (the
     transposed embedding), so decoding never re-quantizes the output head;
     the embedding itself stays float for the table lookup.
+
+    ``memo`` is an optional cross-call cache keyed by (tensor identity, mode,
+    execution point, stacked axes). Passing the same dict across several calls
+    makes the prepared trees SHARE leaves wherever the execution point agrees
+    — how the multi-point weight bank (``repro.runtime.bank``) keeps pinned
+    layers single-copy across its modes.
     """
     backend = get_backend(mode)
     if mode == "exact":
         return params
     policy = policy or PrecisionPolicy.accurate()
 
-    spec_of = {}
-    if specs is not None:
-        from repro.models.params import is_spec
-
-        flat_specs, _ = jax.tree_util.tree_flatten_with_path(specs, is_leaf=is_spec)
-        spec_of = {tuple(_path_keys(p)): s for p, s in flat_specs}
-
+    spec_of = _spec_index(specs)
     flat, treedef = jax.tree_util.tree_flatten_with_path(params)
-    memo = {}
+    if memo is None:
+        memo = {}
     out = []
     for path, leaf in flat:
         keys = _path_keys(path)
-        spec = spec_of.get(tuple(keys))
-        stacked = _stacked_axes(keys, spec)
-        if (
-            isinstance(leaf, PreparedWeight)
-            or not _eligible(keys)
-            or not hasattr(leaf, "ndim")
-            or leaf.ndim - stacked < 2
-        ):
+        info = _classify(keys, leaf, spec_of.get(tuple(keys)))
+        if isinstance(leaf, PreparedWeight) or info is None:
             out.append(leaf)
             continue
-        lp = policy.for_layer(_policy_name(keys))
-        # contraction axes of the dot-time 2D view: weights are (in..., out...)
-        # with a single input axis everywhere except wo, whose leading
-        # (heads, head_dim) axes fold into the contraction
-        in_axes = leaf.ndim - stacked - 1 if keys[-1] == "wo" else 1
+        name, stacked, in_axes = info
+        lp = policy.for_layer(name)
         key = (id(leaf), mode, lp, stacked)
         if key not in memo:
             memo[key] = backend.prepare(leaf, lp, stacked_axes=stacked, in_axes=in_axes)
@@ -179,9 +224,11 @@ def prepare_params(params, policy: Optional[PrecisionPolicy], mode: str, *, spec
 
     if isinstance(prepared, dict) and "lm_head" not in prepared and "embed" in prepared:
         embed = params["embed"]
-        if hasattr(embed, "ndim") and embed.ndim == 2:
+        if hasattr(embed, "ndim") and embed.ndim == 2 and not isinstance(embed, PreparedWeight):
+            lp = policy.for_layer("lm_head")
+            key = (id(embed), "lm_head.T", mode, lp)
+            if key not in memo:
+                memo[key] = backend.prepare(embed.T, lp, stacked_axes=0)
             prepared = dict(prepared)
-            prepared["lm_head"] = backend.prepare(
-                embed.T, policy.for_layer("lm_head"), stacked_axes=0
-            )
+            prepared["lm_head"] = memo[key]
     return prepared

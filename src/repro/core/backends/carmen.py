@@ -92,18 +92,26 @@ class CarmenBackend(Backend):
     def prepare(self, w, lp, *, stacked_axes: int = 0, in_axes=None):
         fmt = unit_fmt(lp.fmt)
         data = cordic.signed_digit_round(w, int(lp.depth), fmt)
+        # x_fmt makes the bank self-describing: the prepared dot quantizes
+        # activations at the preparation point's format, so runtime mode
+        # switching (multi-point banks, repro.runtime) never consults ctx.policy
         return PreparedWeight(
             data, None, self.name,
-            (("depth", int(lp.depth)), ("fmt", (fmt.bits, fmt.frac))),
+            (("depth", int(lp.depth)), ("fmt", (fmt.bits, fmt.frac)),
+             ("x_fmt", (lp.fmt.bits, lp.fmt.frac))),
         )
 
     def dot(self, ctx, x, w, *, name: str = ""):
-        lp = ctx.layer_precision(name)
         shape = x.shape[:-1] + (w.shape[-1],)
         x2 = x.reshape(-1, x.shape[-1])
         if isinstance(w, PreparedWeight):
-            xq = quantize_activations(x2, lp.fmt)
+            x_fmt = w.get("x_fmt")
+            x_fmt = (
+                FxPFormat(*x_fmt) if x_fmt else ctx.layer_precision(name).fmt
+            )
+            xq = quantize_activations(x2, x_fmt)
             out = jnp.dot(xq, w.data, preferred_element_type=jnp.float32)
         else:
+            lp = ctx.layer_precision(name)
             out = _carmen_matmul_ste(x2, w, lp.depth, lp.fmt, unit_fmt(lp.fmt))
         return out.reshape(shape).astype(ctx.compute_dtype)

@@ -90,7 +90,12 @@ class Int8Backend(Backend):
         wq, scale = quantize_weight(
             w, stacked_axes=stacked_axes, eff_bits=eff, in_axes=in_axes
         )
-        return PreparedWeight(wq, scale, self.name, (("effective_bits", eff),))
+        # depth recorded for the runtime cycle model (repro.runtime.telemetry);
+        # the arithmetic consumes only the pre-baked effective_bits grid
+        return PreparedWeight(
+            wq, scale, self.name,
+            (("effective_bits", eff), ("depth", int(lp.depth))),
+        )
 
     def dot(self, ctx, x, w, *, name: str = ""):
         if isinstance(w, PreparedWeight):

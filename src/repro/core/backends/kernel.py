@@ -20,23 +20,29 @@ class KernelBackend(Backend):
     def prepare(self, w, lp, *, stacked_axes: int = 0, in_axes=None):
         fmt = unit_fmt(lp.fmt)
         data = cordic.signed_digit_round(w, int(lp.depth), fmt)
+        # x_fmt: bank-carried activation format (see CarmenBackend.prepare)
         return PreparedWeight(
             data, None, self.name,
-            (("depth", int(lp.depth)), ("fmt", (fmt.bits, fmt.frac))),
+            (("depth", int(lp.depth)), ("fmt", (fmt.bits, fmt.frac)),
+             ("x_fmt", (lp.fmt.bits, lp.fmt.frac))),
         )
 
     def dot(self, ctx, x, w, *, name: str = ""):
         from repro.kernels.cordic_mac import ops as mac_ops
 
-        lp = ctx.layer_precision(name)
         x2 = x.reshape(-1, x.shape[-1])
         if isinstance(w, PreparedWeight):
             bits, frac = w.get("fmt")
+            x_fmt = w.get("x_fmt")
+            x_fmt = (
+                FxPFormat(*x_fmt) if x_fmt else ctx.layer_precision(name).fmt
+            )
             out = mac_ops.cordic_mac(
-                x2, w.data, depth=w.get("depth"), x_fmt=lp.fmt,
+                x2, w.data, depth=w.get("depth"), x_fmt=x_fmt,
                 w_fmt=FxPFormat(bits, frac), w_prequantized=True,
             )
         else:
+            lp = ctx.layer_precision(name)
             out = mac_ops.cordic_mac(
                 x2, w, depth=int(lp.depth), x_fmt=lp.fmt, w_fmt=unit_fmt(lp.fmt)
             )

@@ -19,6 +19,8 @@ by the engine, the serving path, and the dry-run configs.
 from __future__ import annotations
 
 import dataclasses
+import json
+import os
 from typing import Callable, Dict, Mapping, Optional, Sequence, Tuple
 
 import jax
@@ -28,9 +30,17 @@ import numpy as np
 from . import cordic
 from .fxp import FXP8, FXP16, FxPFormat
 
-__all__ = ["LayerPrecision", "PrecisionPolicy", "sensitivity_scan", "assign_depths"]
+__all__ = [
+    "CRITICAL_KEYWORDS",
+    "LayerPrecision",
+    "PrecisionPolicy",
+    "pin_critical",
+    "sensitivity_scan",
+    "assign_depths",
+]
 
-_CRITICAL_KEYWORDS = ("router", "gate_logits", "norm", "embed")
+CRITICAL_KEYWORDS = ("router", "gate_logits", "norm", "embed")
+_CRITICAL_KEYWORDS = CRITICAL_KEYWORDS  # backwards-compat alias
 
 
 @dataclasses.dataclass(frozen=True)
@@ -43,6 +53,13 @@ class LayerPrecision:
     @property
     def mode(self) -> str:
         return "accurate" if self.depth >= cordic.full_depth(self.fmt) else "approximate"
+
+    def to_json(self) -> Dict[str, int]:
+        return {"bits": self.fmt.bits, "frac": self.fmt.frac, "depth": int(self.depth)}
+
+    @staticmethod
+    def from_json(d: Mapping[str, int]) -> "LayerPrecision":
+        return LayerPrecision(FxPFormat(int(d["bits"]), int(d["frac"])), int(d["depth"]))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -71,6 +88,59 @@ class PrecisionPolicy:
     @staticmethod
     def approximate(fmt: FxPFormat = FXP8) -> "PrecisionPolicy":
         return PrecisionPolicy.uniform(fmt, cordic.approx_depth(fmt))
+
+    # -- JSON round-trip (the ``--policy-file`` serving interchange format) ---
+    def to_json(self) -> Dict:
+        return {
+            "default": self.default.to_json(),
+            "overrides": {k: lp.to_json() for k, lp in self.overrides.items()},
+        }
+
+    @staticmethod
+    def from_json(d: Mapping) -> "PrecisionPolicy":
+        return PrecisionPolicy(
+            LayerPrecision.from_json(d["default"]),
+            {k: LayerPrecision.from_json(v) for k, v in d.get("overrides", {}).items()},
+        )
+
+    def save(self, path: str) -> None:
+        """Write the policy as JSON (what ``--policy-file`` loads back)."""
+        dirname = os.path.dirname(path)
+        if dirname:
+            os.makedirs(dirname, exist_ok=True)
+        with open(path, "w") as f:
+            json.dump(self.to_json(), f, indent=1, sort_keys=True)
+            f.write("\n")
+
+    @staticmethod
+    def load(path: str) -> "PrecisionPolicy":
+        with open(path) as f:
+            return PrecisionPolicy.from_json(json.load(f))
+
+
+def pin_critical(
+    policy: PrecisionPolicy, *, critical: Sequence[str] = CRITICAL_KEYWORDS
+) -> PrecisionPolicy:
+    """Hard accuracy floor: critical-keyword layers always run at full depth.
+
+    Used when deriving approximate execution points for the runtime-adaptive
+    bank (``repro.runtime``): however aggressively the mode controller demotes,
+    routers / norms / embeddings keep the accurate CORDIC depth — the paper
+    keeps accuracy-sensitive computations accurate regardless of mode.
+    """
+    pinned = LayerPrecision(
+        policy.default.fmt, cordic.full_depth(policy.default.fmt)
+    )
+    # keyword floors FIRST: for_layer's substring scan walks insertion order,
+    # so a non-critical override key that happens to substring-match a
+    # critical layer name (e.g. "final" vs "final_norm") cannot shadow the floor
+    overrides: Dict[str, LayerPrecision] = {key: pinned for key in critical}
+    for name, lp in policy.overrides.items():
+        if any(k in name for k in critical):
+            overrides[name] = LayerPrecision(lp.fmt, cordic.full_depth(lp.fmt))
+        else:
+            overrides[name] = lp
+    return PrecisionPolicy(policy.default, overrides)
 
 
 def sensitivity_scan(

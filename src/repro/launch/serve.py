@@ -2,10 +2,19 @@
 
     PYTHONPATH=src python -m repro.launch.serve --arch olmo-1b --reduced \
         --requests 6 --max-new 16 --mode carmen
+
+Precision policy (paper §III): ``--policy-file`` loads a JSON policy
+(``PrecisionPolicy.save`` / ``assign_depths`` output), ``--calibrate`` runs
+the sensitivity scan on a synthetic calibration batch at startup, otherwise
+the policy is uniform accurate. ``--adaptive`` serves through the
+runtime-adaptive subsystem (``repro.runtime``): a multi-point weight bank +
+mode controller that switches execution points per decode step from live
+telemetry, optionally steered by ``--cycle-budget``.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import jax
@@ -13,9 +22,31 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import ARCHS, get_config, reduced as reduce_cfg
-from repro.core import EngineContext, FXP8, PrecisionPolicy
+from repro.core import FXP8, FXP16, EngineContext, PrecisionPolicy, assign_depths
 from repro.models import get_model
 from repro.serve.engine import BatchedServer, Request
+
+
+def resolve_policy(args, model, params, fmt) -> PrecisionPolicy:
+    """--policy-file > --calibrate (startup sensitivity scan) > accurate."""
+    if args.policy_file:
+        policy = PrecisionPolicy.load(args.policy_file)
+    elif args.calibrate:
+        from repro.runtime import calibration_scan
+
+        rng = np.random.default_rng(0)
+        tokens = rng.integers(0, model.cfg.vocab_size, (2, max(args.prompt_len, 8)))
+        sens = calibration_scan(model, params, tokens, fmt=fmt, mode=args.mode)
+        policy = assign_depths(
+            sens, fmt=fmt, cycle_reduction_target=args.cycle_reduction
+        )
+        print("calibration scan:", {k: round(v, 4) for k, v in sorted(sens.items())})
+    else:
+        policy = PrecisionPolicy.accurate(fmt)
+    if args.save_policy:
+        policy.save(args.save_policy)
+        print(f"policy saved to {args.save_policy}")
+    return policy
 
 
 def main(argv=None):
@@ -30,37 +61,86 @@ def main(argv=None):
     ap.add_argument("--per-call", action="store_true",
                     help="skip prepare_params: re-quantize weights every step "
                          "(the seed behaviour; for A/B benchmarking)")
+    ap.add_argument("--fxp16", action="store_true",
+                    help="FxP16 operand format (default FxP8)")
+    ap.add_argument("--policy-file", default=None,
+                    help="JSON precision policy (PrecisionPolicy.save / assign_depths)")
+    ap.add_argument("--calibrate", action="store_true",
+                    help="run the §III sensitivity scan on a calibration batch at startup")
+    ap.add_argument("--save-policy", default=None,
+                    help="write the resolved policy as JSON (round-trips via --policy-file)")
+    ap.add_argument("--cycle-reduction", type=float, default=0.33,
+                    help="assign_depths cycle-reduction budget for --calibrate")
+    ap.add_argument("--adaptive", action="store_true",
+                    help="runtime-adaptive precision: multi-point bank + mode controller")
+    ap.add_argument("--cycle-budget", type=float, default=0.75,
+                    help="--adaptive: target MAC-cycle fraction vs all-accurate")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="per-request sampling temperature (0 = greedy)")
+    ap.add_argument("--seed", type=int, default=None,
+                    help="base sampling seed (request i uses seed + i)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = reduce_cfg(cfg)
     model = get_model(cfg)
-    ctx = (
-        EngineContext(mode="exact", compute_dtype=jnp.float32)
-        if args.mode == "exact"
-        else EngineContext(
-            mode=args.mode, policy=PrecisionPolicy.accurate(FXP8), compute_dtype=jnp.float32
-        )
-    )
     params = model.init(jax.random.PRNGKey(0))
+    fmt = FXP16 if args.fxp16 else FXP8
+
+    if args.mode == "exact":
+        ctx = EngineContext(mode="exact", compute_dtype=jnp.float32)
+        policy = None
+    else:
+        policy = resolve_policy(args, model, params, fmt)
+        ctx = EngineContext(mode=args.mode, policy=policy, compute_dtype=jnp.float32)
+
+    controller = None
+    if args.adaptive:
+        if args.mode == "exact":
+            raise SystemExit("--adaptive needs --mode carmen|int8|kernel")
+        if args.per_call:
+            raise SystemExit("--per-call contradicts --adaptive: the multi-point "
+                             "bank IS the prepared path")
+        from repro.runtime import ControllerConfig, ModeController, build_bank, default_points
+
+        # int8 caps at 8 effective bits: an FXP16 point would cost 1.75x
+        # cycles for bit-identical arithmetic, so the ladder drops it
+        hifi = None if args.mode == "int8" else FXP16
+        bank = build_bank(
+            params, args.mode,
+            default_points(fmt, base_policy=policy, hifi_fmt=hifi),
+            specs=model.specs(),
+        )
+        controller = ModeController(bank, ControllerConfig(cycle_budget=args.cycle_budget))
+        print(f"bank: points={bank.names} shared_leaves={bank.shared_leaves}/"
+              f"{bank.unique_leaves} rel_cycles="
+              f"{ {n: round(bank.rel_cycles(n), 3) for n in bank.names} }")
+
     server = BatchedServer(
         model, ctx, params, slots=args.slots,
         max_len=args.prompt_len + args.max_new + 2,
         prepare_weights=not args.per_call,
+        controller=controller,
     )
     rng = np.random.default_rng(0)
     reqs = [
-        Request(i, rng.integers(0, cfg.vocab_size, args.prompt_len).astype(np.int32), args.max_new)
+        Request(
+            i, rng.integers(0, cfg.vocab_size, args.prompt_len).astype(np.int32),
+            args.max_new, temperature=args.temperature,
+            seed=None if args.seed is None else args.seed + i,
+        )
         for i in range(args.requests)
     ]
     t0 = time.time()
     results = server.run(reqs)
     dt = time.time() - t0
     total_tokens = sum(len(v) for v in results.values())
-    weights = "per-call" if args.per_call else "prepared"
+    weights = "adaptive" if args.adaptive else ("per-call" if args.per_call else "prepared")
     print(f"served {len(results)} requests, {total_tokens} tokens in {dt:.1f}s "
           f"({total_tokens/max(dt,1e-9):.1f} tok/s, mode={args.mode}, {weights} weights)")
+    if server.telemetry is not None:
+        print("telemetry:", json.dumps(server.telemetry.summary()))
     for rid in sorted(results):
         print(f"  req {rid}: {results[rid][:8]}...")
     return results

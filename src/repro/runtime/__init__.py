@@ -1,0 +1,47 @@
+"""Runtime-adaptive precision: execution mode as a per-step serving decision.
+
+Paper mapping (§II-C / §III): CARMEN's control engine exposes the CORDIC
+iteration depth through configuration registers, "enabling dynamic switching
+between approximate and accurate execution modes without hardware
+modification". The weight bank in the PE array never changes between modes —
+only the iteration count does. This package is the software incarnation of
+that split for the serving loop:
+
+* :mod:`repro.runtime.bank` — **multi-point weight banks**. One prepare pass
+  materializes every execution point (e.g. approx-depth FxP8, full-depth
+  FxP8, full-depth FxP16) per layer, sharing prepared leaves wherever the
+  per-layer execution point agrees (criticality-pinned layers are stored
+  once). Switching modes at serve time then costs zero weight-side work —
+  "no hardware modification".
+* :mod:`repro.runtime.controller` — the **mode controller** feedback loop.
+  Each decode step it reads cheap telemetry (top-2 logit margin per slot,
+  queue depth / admission pressure, a cycle-budget target) and selects the
+  execution point for the next step, with hysteresis against thrashing. The
+  §III accuracy floor is structural: approximate points are derived through
+  :func:`repro.core.precision_policy.pin_critical`, so critical layers run
+  accurate in every mode the controller can reach.
+* :mod:`repro.runtime.telemetry` — mode occupancy, estimated MAC cycles
+  saved (the paper's K*(depth+1) iterative-PE cycle model), and switch
+  counts, exported by ``BatchedServer`` and surfaced by ``launch/serve.py``.
+* :mod:`repro.runtime.calibrate` — the serving-side §III sensitivity scan:
+  a calibration batch measures per-layer-group logit perturbation under
+  depth demotion, feeding ``assign_depths`` at server startup.
+"""
+from .bank import ExecutionPoint, MultiPointBank, build_bank, default_points
+from .calibrate import calibration_scan
+from .controller import ControllerConfig, ModeController, StepSignals
+from .telemetry import TelemetryRecorder, estimate_point_cycles, teacher_forced_agreement
+
+__all__ = [
+    "ExecutionPoint",
+    "MultiPointBank",
+    "build_bank",
+    "default_points",
+    "calibration_scan",
+    "ControllerConfig",
+    "ModeController",
+    "StepSignals",
+    "TelemetryRecorder",
+    "estimate_point_cycles",
+    "teacher_forced_agreement",
+]

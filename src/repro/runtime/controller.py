@@ -1,0 +1,118 @@
+"""The serving-loop mode controller: per-step execution-point selection.
+
+Each decode step the :class:`ModeController` reads :class:`StepSignals` —
+cheap telemetry the server already has in hand — and votes to demote (move
+to a cheaper execution point), promote (toward accurate), or hold:
+
+* **cycle budget**: an EMA of the relative MAC-cycle cost of recent steps is
+  steered toward ``cycle_budget`` (a fraction of the all-accurate cost, e.g.
+  0.75). Over budget always demotes and blocks promotion — the latency
+  target is hard.
+* **admission pressure**: a non-empty queue with zero free slots demotes —
+  approximate tokens now beat accurate tokens later under load.
+* **logit margin**: when the *least confident* active slot still has a top-2
+  logit margin above ``margin_demote``, approximation is safe (argmax will
+  not flip); a margin below ``margin_promote`` asks for accuracy back.
+
+Votes must repeat ``hysteresis`` consecutive steps before the controller
+moves one rung on the bank's cheap->accurate ladder, so transient signals do
+not thrash the jit cache. The accuracy floor is structural, not a vote: every
+reachable point pins critical layers accurate (``pin_critical``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from .bank import MultiPointBank
+
+__all__ = ["ControllerConfig", "ModeController", "StepSignals"]
+
+
+@dataclasses.dataclass(frozen=True)
+class StepSignals:
+    """One decode step's telemetry, as seen by the controller."""
+
+    active: int = 0
+    queue_depth: int = 0
+    free_slots: int = 0
+    min_margin: Optional[float] = None  # top-2 logit margin, least confident slot
+
+
+@dataclasses.dataclass(frozen=True)
+class ControllerConfig:
+    margin_demote: float = 6.0      # min margin above which approx is safe
+    margin_promote: float = 1.5     # min margin below which accuracy is wanted
+    cycle_budget: Optional[float] = None  # target mean relative cycles (0, 1]
+    hysteresis: int = 2             # consecutive same-direction votes per move
+    ema: float = 0.9                # smoothing of the relative-cycle estimate
+    pin: Optional[str] = None       # fix the controller to one point (no adaptation)
+    start: Optional[str] = None     # initial point (default: the reference)
+
+
+class ModeController:
+    """Feedback loop selecting the bank execution point for each decode step."""
+
+    def __init__(self, bank: MultiPointBank, config: Optional[ControllerConfig] = None):
+        self.bank = bank
+        self.cfg = config or ControllerConfig()
+        for name in (self.cfg.pin, self.cfg.start):
+            if name is not None and name not in bank.names:
+                raise ValueError(f"unknown execution point {name!r}; bank has {bank.names}")
+        if self.cfg.cycle_budget is not None and not 0.0 < self.cfg.cycle_budget:
+            raise ValueError("cycle_budget must be positive")
+        initial = self.cfg.pin or self.cfg.start or bank.reference
+        self._idx = bank.index(initial)
+        self._streak = 0
+        self.switches = 0
+        self._rel_ema = bank.rel_cycles(initial)
+
+    # -- state ----------------------------------------------------------------
+    @property
+    def point(self) -> str:
+        """The execution point the NEXT step will run at."""
+        return self.bank.points[self._idx].name
+
+    def tree(self):
+        """The prepared weight tree for the current point (zero-copy switch)."""
+        return self.bank.tree(self.point)
+
+    @property
+    def rel_cycles_ema(self) -> float:
+        return self._rel_ema
+
+    # -- feedback -------------------------------------------------------------
+    def observe(self, signals: StepSignals) -> str:
+        """Account for the step just executed and pick the next point."""
+        cfg = self.cfg
+        self._rel_ema = cfg.ema * self._rel_ema + (1.0 - cfg.ema) * self.bank.rel_cycles(
+            self.point
+        )
+        if cfg.pin is not None:
+            return self.point
+
+        over_budget = cfg.cycle_budget is not None and self._rel_ema > cfg.cycle_budget
+        pressure = signals.queue_depth > 0 and signals.free_slots == 0
+        margin = signals.min_margin
+        confident = margin is not None and margin >= cfg.margin_demote
+        uncertain = margin is not None and margin < cfg.margin_promote
+
+        if uncertain and not over_budget and not pressure:
+            want = +1
+        elif over_budget or pressure or confident:
+            want = -1
+        else:
+            want = 0
+
+        if want == 0:
+            self._streak = 0
+            return self.point
+        self._streak = want if self._streak * want <= 0 else self._streak + want
+        if abs(self._streak) >= cfg.hysteresis:
+            new_idx = min(max(self._idx + (1 if want > 0 else -1), 0),
+                          len(self.bank.points) - 1)
+            if new_idx != self._idx:
+                self._idx = new_idx
+                self.switches += 1
+            self._streak = 0
+        return self.point

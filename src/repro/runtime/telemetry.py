@@ -1,0 +1,142 @@
+"""Serving telemetry: mode occupancy, MAC-cycle accounting, switch counts.
+
+Cycle model: one iteration of the iterative CORDIC PE is one cycle, so a
+K-length dot at depth d costs K*(d+1) cycles (``repro.core.mac.mac_cycles``).
+A weight tensor of N output channels therefore costs numel(W)*(d+1) cycles
+per token pushed through it. :func:`estimate_point_cycles` folds that over
+every engine-routed weight at a policy's per-layer depths — the quantity the
+paper's 33%-cycle-reduction claim is stated in, and the one the mode
+controller budgets against.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.backends import iter_dot_weights
+from repro.core.precision_policy import PrecisionPolicy
+
+__all__ = ["TelemetryRecorder", "estimate_point_cycles", "teacher_forced_agreement"]
+
+
+def estimate_point_cycles(params, policy: PrecisionPolicy, *, specs=None) -> float:
+    """Estimated engine MAC cycles per decoded token under ``policy``.
+
+    Walks the same leaves ``prepare_params`` formats (plus the tied-embedding
+    lm_head) and charges numel * (depth + 1) per leaf — the iterative-PE
+    cycle model. Works on raw or prepared trees (both expose ``.shape``).
+    """
+    total = 0.0
+    for _, name, leaf, _, _ in iter_dot_weights(params, specs=specs):
+        depth = policy.for_layer(name).depth
+        total += float(np.prod(leaf.shape)) * (depth + 1)
+    if isinstance(params, dict) and "lm_head" not in params and "embed" in params:
+        embed = params["embed"]
+        if hasattr(embed, "shape") and getattr(embed, "ndim", 0) == 2:
+            depth = policy.for_layer("lm_head").depth
+            total += float(np.prod(embed.shape)) * (depth + 1)
+    return total
+
+
+def teacher_forced_agreement(model, ctx, tree, requests, results, margins):
+    """Greedy-match rate of ``tree`` against a reference run's outputs.
+
+    Teacher-forced: the execution point under test re-predicts every
+    generated token of the reference run given the reference run's own
+    prefix, so one flipped token does not cascade into the metric. Returns
+    ``(overall, high_confidence, threshold, n_high)`` where tokens are split
+    at the median reference top-2 margin — the "matched greedy-decode
+    outputs on high-confidence tokens" quantity.
+    """
+    matches, flat = [], []
+    for req in requests:
+        gen = np.asarray(results[req.rid], np.int32)
+        seq = np.concatenate([np.asarray(req.prompt, np.int32), gen])
+        logits, _ = model.forward(tree, {"tokens": jnp.asarray(seq[None, :-1])}, ctx)
+        pred = np.asarray(logits)[0].argmax(-1)
+        start = len(req.prompt) - 1
+        matches.extend(pred[start:start + len(gen)] == gen)
+        flat.extend(margins[req.rid])
+    matches, flat = np.asarray(matches), np.asarray(flat)
+    thr = float(np.median(flat))
+    high = flat >= thr
+    return float(matches.mean()), float(matches[high].mean()), thr, int(high.sum())
+
+
+@dataclasses.dataclass
+class TelemetryRecorder:
+    """Accumulates per-step serving telemetry for one adaptive run.
+
+    ``record_step`` is called once per decode step with the executed point
+    and the number of active slots (tokens produced); ``record_prefill``
+    charges prompt tokens without counting a decode step or a switch.
+    Savings are relative to running every token at the bank's reference
+    (all-accurate) point.
+    """
+
+    cycles_per_token: Dict[str, float]
+    reference: str
+
+    def __post_init__(self):
+        self.reset()
+
+    @classmethod
+    def for_bank(cls, bank) -> "TelemetryRecorder":
+        return cls(dict(bank.cycles_per_token), bank.reference)
+
+    def reset(self) -> None:
+        self.steps = 0
+        self.switches = 0
+        self.tokens_by_point: Dict[str, int] = {k: 0 for k in self.cycles_per_token}
+        self.steps_by_point: Dict[str, int] = {k: 0 for k in self.cycles_per_token}
+        self.est_cycles = 0.0
+        self.baseline_cycles = 0.0
+        self.min_margins: list = []
+        self._prev_point: Optional[str] = None
+
+    def _charge(self, point: str, tokens: int) -> None:
+        self.tokens_by_point[point] += tokens
+        self.est_cycles += tokens * self.cycles_per_token[point]
+        self.baseline_cycles += tokens * self.cycles_per_token[self.reference]
+
+    def record_prefill(self, point: str, tokens: int) -> None:
+        self._charge(point, tokens)
+
+    def record_step(self, point: str, active: int, min_margin: Optional[float] = None) -> None:
+        self.steps += 1
+        self.steps_by_point[point] += 1
+        if self._prev_point is not None and point != self._prev_point:
+            self.switches += 1
+        self._prev_point = point
+        self._charge(point, active)
+        if min_margin is not None:
+            self.min_margins.append(float(min_margin))
+
+    @property
+    def tokens(self) -> int:
+        return sum(self.tokens_by_point.values())
+
+    def savings_frac(self) -> float:
+        """Estimated fraction of MAC cycles saved vs all-accurate serving."""
+        if self.baseline_cycles <= 0:
+            return 0.0
+        return 1.0 - self.est_cycles / self.baseline_cycles
+
+    def summary(self) -> Dict:
+        tokens = max(self.tokens, 1)
+        return {
+            "steps": self.steps,
+            "tokens": self.tokens,
+            "switches": self.switches,
+            "mode_occupancy": {
+                k: round(v / tokens, 4) for k, v in self.tokens_by_point.items()
+            },
+            "steps_by_point": dict(self.steps_by_point),
+            "est_mac_cycles": self.est_cycles,
+            "all_accurate_mac_cycles": self.baseline_cycles,
+            "est_cycle_savings_frac": round(self.savings_frac(), 4),
+            "reference": self.reference,
+        }

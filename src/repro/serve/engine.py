@@ -3,7 +3,7 @@
 The decode step is the unit the decode-shape cells lower (one new token against
 a seq_len-deep KV cache). The scheduler below implements simple continuous
 batching over a fixed slot count — admit/evict per step, per-slot positions —
-with two serving fast paths on top:
+with three serving fast paths on top:
 
 * **prepared weight banks**: on construction the server runs
   ``prepare_params`` (quantize once), so carmen/int8/kernel decode performs
@@ -11,8 +11,16 @@ with two serving fast paths on top:
 * **batched prefill**: an admitted prompt runs through the model in ONE
   multi-token forward (``decode_step`` with S = prompt length), and the
   resulting KV rows are scattered into the slot cache — replacing the seed's
-  token-by-token Python loop. Greedy sampling happens on device inside the
-  jitted step, so only (B, 1) token ids cross the host boundary per step.
+  token-by-token Python loop. Sampling happens on device inside the jitted
+  step (per-slot temperature + per-request PRNG streams), so only (B, 1)
+  token ids and a (B,) top-2 logit margin cross the host boundary per step;
+* **runtime-adaptive precision** (``repro.runtime``): pass a
+  :class:`~repro.runtime.controller.ModeController` and each decode step
+  executes at the controller's current execution point — a different
+  prepared tree from the multi-point weight bank, selected from live
+  telemetry (logit margins, queue pressure, cycle budget) with zero
+  weight-side work per switch. ``self.telemetry`` accumulates mode
+  occupancy, estimated MAC cycles saved, and switch counts.
 
 SSM/hybrid/audio families keep the sequential prefill path (their recurrent
 state is carried step-by-step); the distributed story (cache shardings) lives
@@ -64,12 +72,67 @@ def sample(logits, key, *, temperature: float = 0.0):
     return jax.random.categorical(key, scaled, axis=-1).astype(jnp.int32)
 
 
+# ---------------------------------------------------------------------------
+# Serving steps: per-slot sampling + margin telemetry
+# ---------------------------------------------------------------------------
+
+
+def _sample_slots(last, base_keys, counts, temps):
+    """Per-slot sampling: last (B, V) logits -> (B, 1) int32 tokens.
+
+    ``base_keys`` (B, 2) per-request PRNG keys, ``counts`` (B,) per-request
+    generated-token indices (folded in, so a request's stream is independent
+    of batch composition and scheduling), ``temps`` (B,) temperatures —
+    ``temp <= 0`` means greedy, bit-identical to plain argmax.
+    """
+    greedy = jnp.argmax(last, axis=-1).astype(jnp.int32)
+    keys = jax.vmap(jax.random.fold_in)(base_keys, counts)
+    scaled = last / jnp.maximum(temps, 1e-6)[:, None]
+    sampled = jax.vmap(jax.random.categorical)(keys, scaled).astype(jnp.int32)
+    return jnp.where(temps > 0.0, sampled, greedy)[:, None]
+
+
+def _margin(last):
+    """Top-2 logit margin per slot — the controller's confidence signal."""
+    top2 = jax.lax.top_k(last, 2)[0]
+    return top2[:, 0] - top2[:, 1]
+
+
+def make_serve_decode_step(model: ModelApi, ctx: EngineContext):
+    """Decode + per-slot sampling + margin telemetry (the scheduler's step).
+
+    Only (B, 1) token ids and (B,) float margins cross the host boundary.
+    """
+
+    def decode_serve(params, tokens, cache, base_keys, counts, temps):
+        logits, cache = model.decode_step(params, tokens, cache, ctx)
+        last = logits[:, -1, :].astype(jnp.float32)
+        return _sample_slots(last, base_keys, counts, temps), _margin(last), cache
+
+    return decode_serve
+
+
+def make_serve_prefill_step(model: ModelApi, ctx: EngineContext):
+    """Whole-prompt prefill with sampling: tokens (1, P) -> first token + margin."""
+
+    def prefill_serve(params, tokens, cache, base_keys, temps):
+        logits, cache = model.decode_step(params, tokens, cache, ctx)
+        last = logits[:, -1, :].astype(jnp.float32)
+        counts = jnp.zeros((tokens.shape[0],), jnp.int32)  # first generated token
+        return _sample_slots(last, base_keys, counts, temps), _margin(last), cache
+
+    return prefill_serve
+
+
 @dataclasses.dataclass
 class Request:
     rid: int
     prompt: np.ndarray  # (P,) int32, P >= 1
     max_new: int
+    temperature: float = 0.0      # <= 0: greedy
+    seed: Optional[int] = None    # PRNG stream seed; defaults to rid
     generated: Optional[List[int]] = None
+    margins: Optional[List[float]] = None  # top-2 logit margin per generated token
 
 
 def _checked_prompt(req: Request) -> np.ndarray:
@@ -84,10 +147,17 @@ def _checked_prompt(req: Request) -> np.ndarray:
 
 @dataclasses.dataclass
 class BatchedServer:
-    """Continuous batching over ``slots`` concurrent sequences (greedy).
+    """Continuous batching over ``slots`` concurrent sequences.
 
     ``prepare_weights=True`` (default) formats the weight bank once through
     the engine's backend registry; pass False to benchmark the per-call path.
+
+    ``controller`` switches the server to runtime-adaptive precision: decode
+    executes at the controller's current execution point (a tree from its
+    multi-point weight bank), the controller observes margins / queue
+    pressure after every step, and ``self.telemetry`` accumulates occupancy,
+    switch counts, and estimated MAC-cycle savings. ``params`` may stay the
+    raw float tree in that case — the bank carries all serving weights.
     """
 
     model: ModelApi
@@ -96,17 +166,31 @@ class BatchedServer:
     slots: int = 4
     max_len: int = 256
     prepare_weights: bool = True
+    controller: Optional[object] = None  # repro.runtime.ModeController
 
     def __post_init__(self):
-        if self.prepare_weights:
-            self.params = prepare_params(
-                self.params, self.ctx.policy, self.ctx.mode, specs=self.model.specs()
-            )
-        self.decode = jax.jit(make_decode_sample_step(self.model, self.ctx))
-        self.prefill = jax.jit(make_cached_prefill_step(self.model, self.ctx))
+        if self.controller is not None:
+            from repro.runtime import TelemetryRecorder
+
+            self.telemetry = TelemetryRecorder.for_bank(self.controller.bank)
+        else:
+            self.telemetry = None
+            if self.prepare_weights:
+                self.params = prepare_params(
+                    self.params, self.ctx.policy, self.ctx.mode, specs=self.model.specs()
+                )
+        self.decode = jax.jit(make_serve_decode_step(self.model, self.ctx))
+        self.prefill = jax.jit(make_serve_prefill_step(self.model, self.ctx))
         self.cache = self.model.make_cache(self.slots, self.max_len, dtype=jnp.float32)
         self.active: Dict[int, Request] = {}
         self.batched_prefill = self.model.cfg.family in _BATCHED_PREFILL_FAMILIES
+        self._slot_keys = jnp.stack(
+            [jax.random.PRNGKey(0)] * self.slots
+        )  # (slots, 2) per-request PRNG streams
+        self._slot_temps = np.zeros((self.slots,), np.float32)
+
+    def _serving_tree(self):
+        return self.controller.tree() if self.controller is not None else self.params
 
     def _scatter_slot(self, slot: int, row_cache):
         """Write a freshly prefilled single-row cache into this slot's rows."""
@@ -130,21 +214,37 @@ class BatchedServer:
         prompt length), a sequential token loop for recurrent state.
         """
         prompt = _checked_prompt(req)
+        tree = self._serving_tree()
+        seed = req.seed if req.seed is not None else req.rid
+        base_key = jax.random.PRNGKey(seed)
+        temp = np.float32(req.temperature)
         row = self.model.make_cache(1, self.max_len, dtype=jnp.float32)
         if self.batched_prefill:
-            tok, row = self.prefill(self.params, jnp.asarray(prompt[None, :]), row)
-            tok = int(np.asarray(tok)[0, 0])
+            tok, margin, row = self.prefill(
+                tree, jnp.asarray(prompt[None, :]), row,
+                base_key[None, :], jnp.asarray([temp]),
+            )
         else:
+            zero = jnp.zeros((1,), jnp.int32)
             for t in prompt:
-                sampled, row = self.decode(
-                    self.params, jnp.asarray([[t]], jnp.int32), row
+                tok, margin, row = self.decode(
+                    tree, jnp.asarray([[t]], jnp.int32), row,
+                    base_key[None, :], zero, jnp.asarray([temp]),
                 )
-            tok = int(np.asarray(sampled)[0, 0])
         self._scatter_slot(slot, row)
-        req.generated = [tok]
+        self._slot_keys = self._slot_keys.at[slot].set(base_key)
+        self._slot_temps[slot] = temp
+        req.generated = [int(np.asarray(tok)[0, 0])]
+        req.margins = [float(np.asarray(margin)[0])]
+        if self.telemetry is not None:
+            self.telemetry.record_prefill(self.controller.point, len(prompt))
 
     def run(self, requests: List[Request]) -> Dict[int, List[int]]:
-        """Serve requests to completion; returns rid -> generated tokens."""
+        """Serve requests to completion; returns rid -> generated tokens.
+
+        Per-token top-2 margins land on each request's ``.margins``; with a
+        controller attached, ``self.telemetry`` holds the adaptive-run record.
+        """
         for req in requests:  # reject before any state mutates
             _checked_prompt(req)
         queue = list(requests)
@@ -165,13 +265,34 @@ class BatchedServer:
             if not self.active:
                 continue
             toks = np.zeros((self.slots, 1), np.int32)
+            counts = np.zeros((self.slots,), np.int32)
             for rid, req in self.active.items():
                 toks[slot_of[rid], 0] = req.generated[-1]
-            sampled, self.cache = self.decode(self.params, jnp.asarray(toks), self.cache)
+                counts[slot_of[rid]] = len(req.generated)
+            sampled, margins, self.cache = self.decode(
+                self._serving_tree(), jnp.asarray(toks), self.cache,
+                self._slot_keys, jnp.asarray(counts), jnp.asarray(self._slot_temps),
+            )
             sampled = np.asarray(sampled)
+            margins = np.asarray(margins)
+            if self.controller is not None:
+                from repro.runtime import StepSignals
+
+                active_margins = [float(margins[slot_of[r]]) for r in self.active]
+                point = self.controller.point  # the point this step executed at
+                self.telemetry.record_step(
+                    point, active=len(self.active), min_margin=min(active_margins)
+                )
+                self.controller.observe(StepSignals(
+                    active=len(self.active),
+                    queue_depth=len(queue),
+                    free_slots=len(free),
+                    min_margin=min(active_margins),
+                ))
             done = []
             for rid, req in self.active.items():
                 req.generated.append(int(sampled[slot_of[rid], 0]))
+                req.margins.append(float(margins[slot_of[rid]]))
                 if len(req.generated) >= req.max_new:
                     done.append(rid)
             for rid in done:

@@ -5,10 +5,13 @@ import numpy as np
 
 from repro.core import (
     FXP8,
+    FXP16,
+    LayerPrecision,
     PrecisionPolicy,
     approx_depth,
     assign_depths,
     full_depth,
+    pin_critical,
     sensitivity_scan,
 )
 
@@ -50,3 +53,95 @@ def test_policy_uniform_and_modes():
     app = PrecisionPolicy.approximate(FXP8).default
     assert acc.mode == "accurate" and app.mode == "approximate"
     assert app.depth < acc.depth
+
+
+def test_critical_never_demoted_even_at_full_budget():
+    """router/norm/embed layers stay accurate no matter the budget."""
+    sens = {
+        "moe.router": 0.0001,
+        "final_norm": 0.0002,
+        "embed": 0.0003,
+        "layer.attn.q": 0.01,
+        "layer.mlp.up": 0.02,
+    }
+    pol = assign_depths(sens, fmt=FXP8, cycle_reduction_target=1.0)
+    for critical in ("moe.router", "final_norm", "embed"):
+        assert pol.for_layer(critical).depth == full_depth(FXP8), critical
+    # non-critical layers all demoted under the unbounded budget
+    assert pol.for_layer("layer.attn.q").depth == approx_depth(FXP8)
+    assert pol.for_layer("layer.mlp.up").depth == approx_depth(FXP8)
+
+
+def test_assign_depths_budget_monotone():
+    """A larger cycle budget demotes a superset of layers."""
+    rng = np.random.default_rng(0)
+    sens = {f"layer{i}.mlp.up": float(s) for i, s in enumerate(rng.uniform(0.01, 1.0, 12))}
+    prev: set = set()
+    for target in (0.0, 0.1, 0.2, 0.3, 1.0):
+        demoted = set(assign_depths(sens, fmt=FXP8, cycle_reduction_target=target).overrides)
+        assert prev <= demoted, (target, prev, demoted)
+        prev = demoted
+    assert prev == set(sens)  # unbounded budget demotes everything non-critical
+
+
+def test_for_layer_exact_override_beats_substring():
+    approx = LayerPrecision(FXP8, approx_depth(FXP8))
+    exact_lp = LayerPrecision(FXP8, 5)
+    pol = PrecisionPolicy(
+        LayerPrecision(FXP8, full_depth(FXP8)),
+        {"mlp": approx, "layer.mlp.up": exact_lp},
+    )
+    # exact name match wins over the earlier-inserted substring key
+    assert pol.for_layer("layer.mlp.up") is exact_lp
+    # substring match applies to other members of the group
+    assert pol.for_layer("layer.mlp.down") is approx
+    # no match falls through to the default
+    assert pol.for_layer("layer.attn.q").depth == full_depth(FXP8)
+
+
+def test_for_layer_substring_insertion_order():
+    first = LayerPrecision(FXP8, 3)
+    second = LayerPrecision(FXP8, 5)
+    pol = PrecisionPolicy(
+        LayerPrecision(FXP8, full_depth(FXP8)), {"attn": first, "attn.q": second}
+    )
+    assert pol.for_layer("layer.attn.q") is first  # first matching key wins
+
+
+def test_policy_json_roundtrip(tmp_path):
+    pol = assign_depths(
+        {"layer.mlp.up": 0.1, "layer.attn.q": 0.5, "moe.router": 0.01},
+        fmt=FXP16,
+        cycle_reduction_target=0.2,
+    )
+    path = tmp_path / "policy.json"
+    pol.save(str(path))
+    loaded = PrecisionPolicy.load(str(path))
+    assert loaded == pol
+    for name in ("layer.mlp.up", "layer.attn.q", "moe.router", "other"):
+        assert loaded.for_layer(name) == pol.for_layer(name)
+
+
+def test_pin_critical_floors_overrides_and_defaults():
+    approx = LayerPrecision(FXP8, approx_depth(FXP8))
+    pol = PrecisionPolicy(approx, {"moe.router": approx, "layer.mlp.up": approx})
+    pinned = pin_critical(pol)
+    # critical override promoted to full depth; non-critical untouched
+    assert pinned.for_layer("moe.router").depth == full_depth(FXP8)
+    assert pinned.for_layer("layer.mlp.up").depth == approx_depth(FXP8)
+    # critical keyword floor catches layers the policy never listed
+    assert pinned.for_layer("final_norm").depth == full_depth(FXP8)
+    assert pinned.for_layer("embed").depth == full_depth(FXP8)
+    # default (non-critical fallthrough) stays approximate
+    assert pinned.for_layer("layer.attn.q").depth == approx_depth(FXP8)
+
+
+def test_pin_critical_floor_beats_shadowing_override():
+    """A non-critical override key substring-matching a critical layer name
+    ("final" vs "final_norm") must not shadow the keyword floor."""
+    approx = LayerPrecision(FXP8, approx_depth(FXP8))
+    pinned = pin_critical(PrecisionPolicy(LayerPrecision(FXP8, full_depth(FXP8)),
+                                          {"final": approx}))
+    assert pinned.for_layer("final_norm").depth == full_depth(FXP8)
+    # the override still applies to genuinely non-critical matches
+    assert pinned.for_layer("final_proj").depth == approx_depth(FXP8)

@@ -1,0 +1,354 @@
+"""Runtime-adaptive precision subsystem: banks, controller, telemetry, serving.
+
+The contracts under test mirror the paper's §II-C/§III claims:
+* mode switching costs zero weight-side work (multi-point banks share pinned
+  leaves, switching = handing a different resident tree to the decode step);
+* a controller pinned to one execution point is bit-identical to the static
+  prepared backend (the adaptive machinery adds no arithmetic);
+* the controller demotes under pressure / budget and promotes on low margins,
+  with hysteresis, and the telemetry cycle accounting matches the iterative-PE
+  model exactly.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.core import (
+    EngineContext,
+    FXP8,
+    FXP16,
+    LayerPrecision,
+    PrecisionPolicy,
+    approx_depth,
+    full_depth,
+)
+from repro.models import get_model
+from repro.runtime import (
+    ControllerConfig,
+    ExecutionPoint,
+    ModeController,
+    StepSignals,
+    TelemetryRecorder,
+    build_bank,
+    calibration_scan,
+    default_points,
+    estimate_point_cycles,
+)
+from repro.serve.engine import BatchedServer, Request
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = reduced(get_config("olmo-1b"))
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+# ---------------------------------------------------------------------------
+# multi-point banks
+# ---------------------------------------------------------------------------
+
+
+def test_bank_orders_points_and_rel_cycles(small_model):
+    _, model, params = small_model
+    bank = build_bank(params, "carmen", specs=model.specs())
+    assert bank.names == ("approx", "accurate", "hifi")
+    assert bank.reference == "accurate"
+    # exact iterative-PE ratios: (depth+1)/(full+1), uniform over engine dots
+    assert bank.rel_cycles("approx") == pytest.approx(
+        (approx_depth(FXP8) + 1) / (full_depth(FXP8) + 1)
+    )
+    assert bank.rel_cycles("accurate") == 1.0
+    assert bank.rel_cycles("hifi") == pytest.approx(
+        (full_depth(FXP16) + 1) / (full_depth(FXP8) + 1)
+    )
+
+
+def test_bank_shares_leaves_where_points_agree(small_model):
+    """Pinned layers are materialized once and aliased into every tree."""
+    _, model, params = small_model
+    base = PrecisionPolicy(
+        LayerPrecision(FXP8, full_depth(FXP8)),
+        {"layer.attn": LayerPrecision(FXP8, approx_depth(FXP8))},
+    )
+    bank = build_bank(
+        params, "carmen", default_points(FXP8, base_policy=base), specs=model.specs()
+    )
+    mixed, acc = bank.tree("mixed"), bank.tree("accurate")
+    # attn demoted in the mixed point: distinct prepared leaves
+    assert mixed["seg0_dense"]["attn"]["wq"] is not acc["seg0_dense"]["attn"]["wq"]
+    # mlp + tied lm_head agree between the points: the SAME object
+    assert mixed["seg0_dense"]["mlp"]["up"] is acc["seg0_dense"]["mlp"]["up"]
+    assert mixed["lm_head"] is acc["lm_head"]
+    assert bank.shared_leaves > 0
+
+
+def test_bank_rejects_exact_mode(small_model):
+    _, model, params = small_model
+    with pytest.raises(ValueError, match="precision knob"):
+        build_bank(params, "exact", specs=model.specs())
+
+
+def test_bank_carries_activation_format(small_model):
+    """Prepared leaves are self-describing: the dot quantizes activations at
+    the bank point's format, not the context policy's (bank-aware dot)."""
+    _, model, params = small_model
+    bank = build_bank(params, "carmen", specs=model.specs())
+    assert bank.tree("hifi")["seg0_dense"]["mlp"]["up"].get("x_fmt") == (
+        FXP16.bits, FXP16.frac
+    )
+    # a ctx pinned to FXP8 must not change a hifi leaf's arithmetic
+    head = bank.tree("hifi")["lm_head"]  # unstacked 2D leaf
+    ctx8 = EngineContext(mode="carmen", policy=PrecisionPolicy.accurate(FXP8),
+                         compute_dtype=jnp.float32)
+    ctx16 = EngineContext(mode="carmen", policy=PrecisionPolicy.accurate(FXP16),
+                          compute_dtype=jnp.float32)
+    x = np.linspace(-1, 1, head.shape[0], dtype=np.float32)[None, :]
+    out8 = np.asarray(ctx8.dot(x, head, name="lm_head"))
+    out16 = np.asarray(ctx16.dot(x, head, name="lm_head"))
+    np.testing.assert_array_equal(out8, out16)
+
+
+def test_estimate_point_cycles_counts_tied_head(small_model):
+    cfg, model, params = small_model
+    pol = PrecisionPolicy.accurate(FXP8)
+    total = estimate_point_cycles(params, pol, specs=model.specs())
+    head = np.prod(params["embed"].shape) * (full_depth(FXP8) + 1)
+    assert total > head  # the tied lm_head contributes
+    body = sum(
+        np.prod(l.shape) * (full_depth(FXP8) + 1)
+        for l in jax.tree.leaves(params)
+        if getattr(l, "ndim", 0) >= 2
+    )
+    assert total < body + head  # but norms/embeds are not engine dots
+
+
+def test_estimate_point_cycles_on_prepared_tree(small_model):
+    """Prepared trees cost the same as the raw tree they were built from
+    (PreparedWeight nodes are walked as leaves, incl. the materialized head)."""
+    _, model, params = small_model
+    pol = PrecisionPolicy.accurate(FXP8)
+    bank = build_bank(params, "carmen", default_points(FXP8, hifi_fmt=None),
+                      specs=model.specs())
+    raw = estimate_point_cycles(params, pol, specs=model.specs())
+    prepared = estimate_point_cycles(bank.tree("accurate"), pol, specs=model.specs())
+    assert prepared == raw > 0
+
+
+# ---------------------------------------------------------------------------
+# mode controller
+# ---------------------------------------------------------------------------
+
+
+def _toy_bank():
+    """A bank stub: three points, relative cycles 0.5 / 1.0 / 2.0."""
+    from repro.runtime.bank import MultiPointBank
+
+    points = tuple(
+        ExecutionPoint(n, PrecisionPolicy.accurate(FXP8))
+        for n in ("cheap", "accurate", "hifi")
+    )
+    return MultiPointBank(
+        mode="carmen",
+        points=points,
+        trees={n: {"w": n} for n in ("cheap", "accurate", "hifi")},
+        cycles_per_token={"cheap": 50.0, "accurate": 100.0, "hifi": 200.0},
+        reference="accurate",
+    )
+
+
+def test_controller_demotes_under_pressure_with_hysteresis():
+    ctrl = ModeController(_toy_bank(), ControllerConfig(hysteresis=2))
+    pressure = StepSignals(active=2, queue_depth=5, free_slots=0, min_margin=3.0)
+    assert ctrl.point == "accurate"
+    ctrl.observe(pressure)
+    assert ctrl.point == "accurate"  # one vote is not enough
+    ctrl.observe(pressure)
+    assert ctrl.point == "cheap" and ctrl.switches == 1
+    # already at the floor: more pressure cannot demote further
+    ctrl.observe(pressure)
+    ctrl.observe(pressure)
+    assert ctrl.point == "cheap" and ctrl.switches == 1
+
+
+def test_controller_promotes_on_low_margin_when_unloaded():
+    ctrl = ModeController(
+        _toy_bank(), ControllerConfig(hysteresis=2, start="cheap", margin_promote=1.5)
+    )
+    idle_uncertain = StepSignals(active=1, queue_depth=0, free_slots=2, min_margin=0.2)
+    ctrl.observe(idle_uncertain)
+    ctrl.observe(idle_uncertain)
+    assert ctrl.point == "accurate" and ctrl.switches == 1
+
+
+def test_controller_budget_blocks_promotion():
+    cfg = ControllerConfig(hysteresis=1, cycle_budget=0.75, ema=0.5, start="accurate")
+    ctrl = ModeController(_toy_bank(), cfg)
+    uncertain = StepSignals(active=1, queue_depth=0, free_slots=2, min_margin=0.1)
+    # rel EMA starts at 1.0 > budget: over budget demotes despite low margin
+    ctrl.observe(uncertain)
+    assert ctrl.point == "cheap"
+    # EMA decays toward 0.5; once under budget, low margin promotes again
+    trajectory = [ctrl.observe(uncertain) for _ in range(4)]
+    assert "accurate" in trajectory
+    assert ctrl.switches >= 2
+    # but the budget keeps pulling back down: hifi is never reached
+    assert "hifi" not in trajectory
+
+
+def test_controller_hold_resets_streak():
+    ctrl = ModeController(_toy_bank(), ControllerConfig(hysteresis=2))
+    pressure = StepSignals(active=2, queue_depth=5, free_slots=0, min_margin=3.0)
+    neutral = StepSignals(active=2, queue_depth=0, free_slots=1, min_margin=3.0)
+    ctrl.observe(pressure)
+    ctrl.observe(neutral)  # hold: streak resets
+    ctrl.observe(pressure)
+    assert ctrl.point == "accurate" and ctrl.switches == 0
+
+
+def test_controller_pin_never_moves():
+    ctrl = ModeController(_toy_bank(), ControllerConfig(pin="cheap", hysteresis=1))
+    for sig in (
+        StepSignals(active=1, queue_depth=9, free_slots=0, min_margin=0.0),
+        StepSignals(active=1, queue_depth=0, free_slots=3, min_margin=0.0),
+    ):
+        for _ in range(5):
+            ctrl.observe(sig)
+    assert ctrl.point == "cheap" and ctrl.switches == 0
+    assert ctrl.tree() == {"w": "cheap"}
+
+
+def test_controller_rejects_unknown_points():
+    with pytest.raises(ValueError, match="unknown execution point"):
+        ModeController(_toy_bank(), ControllerConfig(pin="fp4"))
+
+
+# ---------------------------------------------------------------------------
+# telemetry
+# ---------------------------------------------------------------------------
+
+
+def test_telemetry_cycle_accounting_and_switches():
+    rec = TelemetryRecorder({"cheap": 50.0, "accurate": 100.0}, "accurate")
+    rec.record_prefill("accurate", tokens=4)
+    rec.record_step("accurate", active=2, min_margin=1.0)
+    rec.record_step("cheap", active=2, min_margin=2.0)
+    rec.record_step("cheap", active=1, min_margin=0.5)
+    s = rec.summary()
+    assert s["steps"] == 3 and s["tokens"] == 9 and s["switches"] == 1
+    assert s["est_mac_cycles"] == 4 * 100 + 2 * 100 + 2 * 50 + 1 * 50
+    assert s["all_accurate_mac_cycles"] == 9 * 100
+    assert s["est_cycle_savings_frac"] == pytest.approx(1 - 750 / 900, abs=1e-4)
+    assert s["mode_occupancy"]["cheap"] == pytest.approx(3 / 9, abs=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# serving integration
+# ---------------------------------------------------------------------------
+
+
+def _requests(cfg, n, max_new=6, seed=3, **kw):
+    rng = np.random.default_rng(seed)
+    return [
+        Request(i, rng.integers(0, cfg.vocab_size, 4).astype(np.int32), max_new, **kw)
+        for i in range(n)
+    ]
+
+
+def test_pinned_controller_bit_identical_to_static(small_model):
+    """Satellite contract: the adaptive machinery at a fixed execution point
+    reproduces the static prepared backend token-for-token."""
+    cfg, model, params = small_model
+    ctx = EngineContext(mode="carmen", policy=PrecisionPolicy.accurate(FXP8),
+                        compute_dtype=jnp.float32)
+    static = BatchedServer(model, ctx, params, slots=2, max_len=16)
+    want = static.run(_requests(cfg, 4))
+
+    bank = build_bank(params, "carmen", specs=model.specs())
+    ctrl = ModeController(bank, ControllerConfig(pin="accurate"))
+    adaptive = BatchedServer(model, ctx, params, slots=2, max_len=16, controller=ctrl)
+    got = adaptive.run(_requests(cfg, 4))
+    assert got == want
+    assert adaptive.telemetry.summary()["mode_occupancy"]["accurate"] == 1.0
+    assert adaptive.telemetry.summary()["switches"] == 0
+
+
+def test_adaptive_server_switches_and_saves_cycles(small_model):
+    """Under queue pressure + a cycle budget the controller demotes and the
+    telemetry shows real savings."""
+    cfg, model, params = small_model
+    ctx = EngineContext(mode="carmen", policy=PrecisionPolicy.accurate(FXP8),
+                        compute_dtype=jnp.float32)
+    bank = build_bank(params, "carmen", default_points(FXP8, hifi_fmt=None),
+                      specs=model.specs())
+    # margins disarmed: the budget + pressure signals drive the trajectory
+    ctrl = ModeController(bank, ControllerConfig(
+        cycle_budget=0.7, margin_promote=-1.0, margin_demote=float("inf")
+    ))
+    server = BatchedServer(model, ctx, params, slots=2, max_len=24, controller=ctrl)
+    server.run(_requests(cfg, 8, max_new=10))
+    s = server.telemetry.summary()
+    assert s["switches"] >= 1
+    assert s["mode_occupancy"]["approx"] > 0.5
+    assert s["est_cycle_savings_frac"] >= 0.25
+    # margins were observed for every decode step
+    assert len(server.telemetry.min_margins) == s["steps"]
+
+
+def test_temperature_and_seed_plumbing(small_model):
+    cfg, model, params = small_model
+    ctx = EngineContext(mode="carmen", policy=PrecisionPolicy.accurate(FXP8),
+                        compute_dtype=jnp.float32)
+    serve = lambda reqs: BatchedServer(model, ctx, params, slots=2, max_len=16).run(reqs)
+
+    # temp=0 requests are greedy regardless of the sampling seed
+    a = serve(_requests(cfg, 2, seed=3))
+    b = serve(_requests(cfg, 2, seed=3, temperature=0.0))
+    assert a == b
+
+    # same seed -> same stream (even across different slots/schedules)
+    rng = np.random.default_rng(5)
+    prompt = rng.integers(0, cfg.vocab_size, 4).astype(np.int32)
+    r = serve([Request(0, prompt, 8, temperature=3.0, seed=11),
+               Request(1, prompt, 8, temperature=3.0, seed=11)])
+    assert r[0] == r[1]
+
+    # different seeds -> different streams (vocab 256, 7 sampled tokens)
+    r2 = serve([Request(0, prompt, 8, temperature=3.0, seed=11),
+                Request(1, prompt, 8, temperature=3.0, seed=12)])
+    assert r2[0] != r2[1]
+
+    # sampled neq greedy at high temperature
+    r3 = serve([Request(0, prompt, 8, temperature=0.0),
+                Request(1, prompt, 8, temperature=5.0, seed=1)])
+    assert r3[0] != r3[1]
+
+
+def test_margins_recorded_per_token(small_model):
+    cfg, model, params = small_model
+    ctx = EngineContext(mode="carmen", policy=PrecisionPolicy.accurate(FXP8),
+                        compute_dtype=jnp.float32)
+    reqs = _requests(cfg, 2, max_new=5)
+    BatchedServer(model, ctx, params, slots=2, max_len=16).run(reqs)
+    for req in reqs:
+        assert len(req.margins) == len(req.generated) == 5
+        assert all(m >= 0.0 for m in req.margins)
+
+
+# ---------------------------------------------------------------------------
+# calibration scan
+# ---------------------------------------------------------------------------
+
+
+def test_calibration_scan_covers_engine_dots(small_model):
+    cfg, model, params = small_model
+    tokens = np.arange(16, dtype=np.int32).reshape(2, 8)
+    sens = calibration_scan(model, params, tokens, fmt=FXP8)
+    assert set(sens) == {
+        "layer.attn.q", "layer.attn.k", "layer.attn.v", "layer.attn.o",
+        "layer.mlp.up", "layer.mlp.gate", "layer.mlp.down", "lm_head",
+    }
+    assert all(v > 0 for v in sens.values())
