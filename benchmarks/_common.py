@@ -1,0 +1,76 @@
+"""Shared benchmark plumbing: argparse boilerplate, model setup, JSON records.
+
+Every JSON benchmark (``bench_prepared`` / ``bench_adaptive`` /
+``bench_speculative``) shares the same skeleton: ``--arch/--full-size/--out``
+(+ optional ``--smoke`` for the CI variant), a reduced-model build, and a
+print-and-write JSON record. It lives here once.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import numpy as np
+
+from repro.configs import ARCHS, get_config, reduced as reduce_cfg
+from repro.models import get_model
+from repro.serve.engine import Request
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "artifacts", "bench")
+
+
+def bench_parser(description: str, *, default_out: str,
+                 smoke: bool = True) -> argparse.ArgumentParser:
+    """The common benchmark CLI: --arch / --full-size / --out [/ --smoke]."""
+    ap = argparse.ArgumentParser(description=description)
+    ap.add_argument("--arch", choices=sorted(ARCHS), default="olmo-1b")
+    ap.add_argument("--full-size", action="store_true",
+                    help="benchmark the unreduced config")
+    ap.add_argument("--out", default=os.path.join(ARTIFACTS, default_out))
+    if smoke:
+        ap.add_argument("--smoke", action="store_true",
+                        help="tiny CI workload (reduced model, short generations)")
+    return ap
+
+
+def load_model(arch: str, *, full_size: bool = False):
+    """(cfg, model, params) for the benchmark workload (reduced by default)."""
+    cfg = get_config(arch)
+    if not full_size:
+        cfg = reduce_cfg(cfg)
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def base_record(args, **extra):
+    """The fields every benchmark record leads with."""
+    rec = {
+        "arch": args.arch,
+        "reduced": not args.full_size,
+        "backend": jax.default_backend(),
+    }
+    rec.update(extra)
+    return rec
+
+
+def make_requests(cfg, n, *, prompt_len, max_new, seed=1, temperature=0.0):
+    rng = np.random.default_rng(seed)
+    return [
+        Request(i, rng.integers(0, cfg.vocab_size, prompt_len).astype(np.int32),
+                max_new, temperature=temperature)
+        for i in range(n)
+    ]
+
+
+def emit_record(record, out: str):
+    """Print the JSON record and (if ``out``) persist it for CI artifacts."""
+    payload = json.dumps(record, indent=1)
+    print(payload)
+    if out:
+        os.makedirs(os.path.dirname(out), exist_ok=True)
+        with open(out, "w") as f:
+            f.write(payload + "\n")
+    return record

@@ -16,18 +16,12 @@ high-confidence tokens, split at the median accurate-run top-2 margin).
 """
 from __future__ import annotations
 
-import argparse
-import json
-import os
 import time
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs import ARCHS, get_config, reduced as reduce_cfg
 from repro.core import EngineContext, FXP8, FXP16, PrecisionPolicy
-from repro.models import get_model
 from repro.runtime import (
     ControllerConfig,
     ModeController,
@@ -35,17 +29,15 @@ from repro.runtime import (
     default_points,
     teacher_forced_agreement,
 )
-from repro.serve.engine import BatchedServer, Request
+from repro.serve.engine import BatchedServer
 
-ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "artifacts", "bench")
-
-
-def make_requests(cfg, n, *, prompt_len, max_new, seed=1):
-    rng = np.random.default_rng(seed)
-    return [
-        Request(i, rng.integers(0, cfg.vocab_size, prompt_len).astype(np.int32), max_new)
-        for i in range(n)
-    ]
+from ._common import (
+    base_record,
+    bench_parser,
+    emit_record,
+    load_model,
+    make_requests,
+)
 
 
 def bench_load(model, cfg, params, bank, n_requests, *, slots, prompt_len,
@@ -97,10 +89,7 @@ def bench_load(model, cfg, params, bank, n_requests, *, slots, prompt_len,
 
 
 def main(argv=None):
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", choices=sorted(ARCHS), default="olmo-1b")
-    ap.add_argument("--full-size", action="store_true",
-                    help="benchmark the unreduced config")
+    ap = bench_parser(__doc__, default_out="BENCH_adaptive.json")
     ap.add_argument("--mode", choices=["carmen", "int8", "kernel"], default="carmen")
     ap.add_argument("--slots", type=int, default=3)
     ap.add_argument("--prompt-len", type=int, default=6)
@@ -110,9 +99,6 @@ def main(argv=None):
     ap.add_argument("--cycle-budget", type=float, default=0.75)
     ap.add_argument("--fxp8", action="store_true",
                     help="FxP8 operand ladder (default FxP16)")
-    ap.add_argument("--smoke", action="store_true",
-                    help="tiny CI workload (reduced model, short generations)")
-    ap.add_argument("--out", default=os.path.join(ARTIFACTS, "BENCH_adaptive.json"))
     args = ap.parse_args(argv)
 
     if args.smoke:
@@ -121,45 +107,32 @@ def main(argv=None):
         args.max_new = 8
         args.slots = 2
 
-    cfg = get_config(args.arch)
-    if not args.full_size:
-        cfg = reduce_cfg(cfg)
-    model = get_model(cfg)
-    params = model.init(jax.random.PRNGKey(0))
+    cfg, model, params = load_model(args.arch, full_size=args.full_size)
     fmt = FXP8 if args.fxp8 else FXP16
     bank = build_bank(params, args.mode, default_points(fmt, hifi_fmt=None),
                       specs=model.specs())
 
-    record = {
-        "arch": args.arch,
-        "reduced": not args.full_size,
-        "mode": args.mode,
-        "fmt": f"FXP{fmt.bits}",
-        "slots": args.slots,
-        "max_new": args.max_new,
-        "cycle_budget": args.cycle_budget,
-        "backend": jax.default_backend(),
-        "bank": {
+    record = base_record(
+        args,
+        mode=args.mode,
+        fmt=f"FXP{fmt.bits}",
+        slots=args.slots,
+        max_new=args.max_new,
+        cycle_budget=args.cycle_budget,
+        bank={
             "points": list(bank.names),
             "rel_cycles": {n: round(bank.rel_cycles(n), 4) for n in bank.names},
             "shared_leaves": bank.shared_leaves,
             "unique_leaves": bank.unique_leaves,
         },
-        "loads": [],
-    }
+        loads=[],
+    )
     for n in (int(x) for x in args.loads.split(",")):
         rec = bench_load(model, cfg, params, bank, n, slots=args.slots,
                          prompt_len=args.prompt_len, max_new=args.max_new,
                          cycle_budget=args.cycle_budget, fmt=fmt)
         record["loads"].append(rec)
-
-    payload = json.dumps(record, indent=1)
-    print(payload)
-    if args.out:
-        os.makedirs(os.path.dirname(args.out), exist_ok=True)
-        with open(args.out, "w") as f:
-            f.write(payload + "\n")
-    return record
+    return emit_record(record, args.out)
 
 
 if __name__ == "__main__":

@@ -12,20 +12,15 @@ writes ``artifacts/bench/bench_prepared.json`` (and prints it).
 """
 from __future__ import annotations
 
-import argparse
-import json
-import os
 import time
 
 import jax
 import jax.numpy as jnp
 
-from repro.configs import ARCHS, get_config, reduced as reduce_cfg
 from repro.core import EngineContext, FXP8, PrecisionPolicy, prepare_params
-from repro.models import get_model
 from repro.serve.engine import make_decode_sample_step
 
-ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "artifacts", "bench")
+from ._common import base_record, bench_parser, emit_record, load_model
 
 
 def bench_mode(model, params, mode: str, *, slots: int, max_len: int, steps: int):
@@ -53,44 +48,21 @@ def bench_mode(model, params, mode: str, *, slots: int, max_len: int, steps: int
 
 
 def main(argv=None):
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", choices=sorted(ARCHS), default="olmo-1b")
-    ap.add_argument("--full-size", action="store_true",
-                    help="benchmark the unreduced config")
+    ap = bench_parser(__doc__, default_out="bench_prepared.json", smoke=False)
     ap.add_argument("--modes", default="carmen,int8")
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--steps", type=int, default=20)
-    ap.add_argument("--out", default=os.path.join(ARTIFACTS, "bench_prepared.json"))
     args = ap.parse_args(argv)
 
-    cfg = get_config(args.arch)
-    if not args.full_size:
-        cfg = reduce_cfg(cfg)
-    model = get_model(cfg)
-    params = model.init(jax.random.PRNGKey(0))
-
-    record = {
-        "arch": args.arch,
-        "reduced": not args.full_size,
-        "slots": args.slots,
-        "steps": args.steps,
-        "backend": jax.default_backend(),
-        "modes": {},
-    }
+    cfg, model, params = load_model(args.arch, full_size=args.full_size)
+    record = base_record(args, slots=args.slots, steps=args.steps, modes={})
     for mode in args.modes.split(","):
         record["modes"][mode] = bench_mode(
             model, params, mode, slots=args.slots, max_len=args.max_len,
             steps=args.steps,
         )
-
-    payload = json.dumps(record, indent=1)
-    print(payload)
-    if args.out:
-        os.makedirs(os.path.dirname(args.out), exist_ok=True)
-        with open(args.out, "w") as f:
-            f.write(payload + "\n")
-    return record
+    return emit_record(record, args.out)
 
 
 if __name__ == "__main__":

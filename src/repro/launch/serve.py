@@ -9,7 +9,12 @@ the sensitivity scan on a synthetic calibration batch at startup, otherwise
 the policy is uniform accurate. ``--adaptive`` serves through the
 runtime-adaptive subsystem (``repro.runtime``): a multi-point weight bank +
 mode controller that switches execution points per decode step from live
-telemetry, optionally steered by ``--cycle-budget``.
+telemetry, optionally steered by ``--cycle-budget``. ``--speculative``
+serves self-speculatively (``repro.spec``): draft ``--draft-len`` tokens on
+the shallow execution point (``--draft-point``, default the bank's cheapest;
+with ``--adaptive`` the controller picks it per round), verify them in one
+accurate multi-token forward, roll the KV cache back past rejections —
+greedy output stays bit-identical to accurate-only serving.
 """
 from __future__ import annotations
 
@@ -75,6 +80,14 @@ def main(argv=None):
                     help="runtime-adaptive precision: multi-point bank + mode controller")
     ap.add_argument("--cycle-budget", type=float, default=0.75,
                     help="--adaptive: target MAC-cycle fraction vs all-accurate")
+    ap.add_argument("--speculative", action="store_true",
+                    help="self-speculative serving: draft on the shallow "
+                         "execution point, verify on the accurate point")
+    ap.add_argument("--draft-len", type=int, default=4,
+                    help="--speculative: tokens drafted per verify round")
+    ap.add_argument("--draft-point", default=None,
+                    help="--speculative: bank point to draft at (default: the "
+                         "cheapest; with --adaptive the controller picks)")
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="per-request sampling temperature (0 = greedy)")
     ap.add_argument("--seed", type=int, default=None,
@@ -96,11 +109,14 @@ def main(argv=None):
         ctx = EngineContext(mode=args.mode, policy=policy, compute_dtype=jnp.float32)
 
     controller = None
-    if args.adaptive:
+    bank = None
+    speculate = None
+    if args.adaptive or args.speculative:
+        what = "--adaptive/--speculative"
         if args.mode == "exact":
-            raise SystemExit("--adaptive needs --mode carmen|int8|kernel")
+            raise SystemExit(f"{what} needs --mode carmen|int8|kernel")
         if args.per_call:
-            raise SystemExit("--per-call contradicts --adaptive: the multi-point "
+            raise SystemExit(f"--per-call contradicts {what}: the multi-point "
                              "bank IS the prepared path")
         from repro.runtime import ControllerConfig, ModeController, build_bank, default_points
 
@@ -112,16 +128,30 @@ def main(argv=None):
             default_points(fmt, base_policy=policy, hifi_fmt=hifi),
             specs=model.specs(),
         )
-        controller = ModeController(bank, ControllerConfig(cycle_budget=args.cycle_budget))
         print(f"bank: points={bank.names} shared_leaves={bank.shared_leaves}/"
               f"{bank.unique_leaves} rel_cycles="
               f"{ {n: round(bank.rel_cycles(n), 3) for n in bank.names} }")
+        if args.adaptive:
+            controller = ModeController(bank, ControllerConfig(
+                cycle_budget=args.cycle_budget,
+                # speculative rounds draft cheap from the first step; the
+                # verify point guards accuracy regardless
+                start=bank.names[0] if args.speculative else None,
+            ))
+    if args.speculative:
+        from repro.spec import SpecConfig
+
+        speculate = SpecConfig(draft_len=args.draft_len,
+                               draft_point=args.draft_point)
 
     server = BatchedServer(
         model, ctx, params, slots=args.slots,
-        max_len=args.prompt_len + args.max_new + 2,
+        max_len=args.prompt_len + args.max_new
+        + (args.draft_len if args.speculative else 0) + 2,
         prepare_weights=not args.per_call,
         controller=controller,
+        speculate=speculate,
+        bank=bank,
     )
     rng = np.random.default_rng(0)
     reqs = [
@@ -137,10 +167,14 @@ def main(argv=None):
     dt = time.time() - t0
     total_tokens = sum(len(v) for v in results.values())
     weights = "adaptive" if args.adaptive else ("per-call" if args.per_call else "prepared")
+    serving = "speculative " if args.speculative else ""
     print(f"served {len(results)} requests, {total_tokens} tokens in {dt:.1f}s "
-          f"({total_tokens/max(dt,1e-9):.1f} tok/s, mode={args.mode}, {weights} weights)")
+          f"({total_tokens/max(dt,1e-9):.1f} tok/s, mode={args.mode}, "
+          f"{serving}{weights} weights)")
     if server.telemetry is not None:
         print("telemetry:", json.dumps(server.telemetry.summary()))
+    if server.spec_telemetry is not None:
+        print("speculative:", json.dumps(server.spec_telemetry.summary()))
     for rid in sorted(results):
         print(f"  req {rid}: {results[rid][:8]}...")
     return results

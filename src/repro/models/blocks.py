@@ -407,16 +407,27 @@ def _combine_scatter(yw, token_of_choice, s: int, d: int):
     )
 
 
-def moe_ffn(p, x, cfg: ModelConfig, ctx: EngineContext, *, name):
+def moe_ffn(p, x, cfg: ModelConfig, ctx: EngineContext, *, name,
+            dropless: bool = False):
     """Batched-per-row MoE: dispatch stays local to each batch row; the E-axis
     reshard of the (B, E, C, D) buffer is the all-to-all (DESIGN.md §6).
 
-    Returns (out, aux) where aux carries the load-balancing loss terms.
+    ``dropless`` (the cached-decode path) widens short blocks' capacity so no
+    routed token is ever dropped. Returns (out, aux) where aux carries the
+    load-balancing loss terms.
     """
     m = cfg.moe
     b, s, d = x.shape
     e, k = m.num_experts, m.top_k
     capacity = max(k, int(math.ceil(s * k / e * m.capacity_factor)))
+    if dropless and s <= 64:
+        # short cached-decode blocks (speculative verify, short batched
+        # prefills): a token's top-k experts are distinct, so per-expert load
+        # is at most s — this capacity is dropless, making S>1 decode match
+        # token-by-token decode (whose s=1 capacity never drops either). The
+        # multi-token verifier leans on that parity. Training/eval forwards
+        # (dropless=False) and long prefills keep capacity-factor economics.
+        capacity = max(capacity, s)
 
     router_logits = jnp.einsum(
         "bsd,de->bse", x.astype(jnp.float32), p["router"].astype(jnp.float32)

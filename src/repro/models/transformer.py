@@ -151,7 +151,9 @@ def _dense_layer(p, h, cfg, ctx, positions, cache, name="layer"):
 def _moe_layer(p, h, cfg, ctx, positions, cache, name="layer"):
     h, new_cache = _attn_block(p, h, cfg, ctx, positions, cache, f"{name}.attn")
     x = blocks.apply_norm(p["mlp_norm"], h, cfg)
-    out, aux = blocks.moe_ffn(p["moe"], x, cfg, ctx, name=f"{name}.moe")
+    # cached decode gets the dropless short-block capacity (S>1 verify parity)
+    out, aux = blocks.moe_ffn(p["moe"], x, cfg, ctx, name=f"{name}.moe",
+                              dropless=cache is not None)
     return h + out, new_cache, aux
 
 

@@ -61,11 +61,19 @@ class ModeController:
                 raise ValueError(f"unknown execution point {name!r}; bank has {bank.names}")
         if self.cfg.cycle_budget is not None and not 0.0 < self.cfg.cycle_budget:
             raise ValueError("cycle_budget must be positive")
-        initial = self.cfg.pin or self.cfg.start or bank.reference
-        self._idx = bank.index(initial)
+        self.reset()
+
+    def reset(self) -> None:
+        """Return to the configured initial point with no accumulated state.
+
+        ``BatchedServer.run`` calls this on entry so consecutive ``run()``
+        invocations are independent (no EMA / streak / switch-count leakage).
+        """
+        initial = self.cfg.pin or self.cfg.start or self.bank.reference
+        self._idx = self.bank.index(initial)
         self._streak = 0
         self.switches = 0
-        self._rel_ema = bank.rel_cycles(initial)
+        self._rel_ema = self.bank.rel_cycles(initial)
 
     # -- state ----------------------------------------------------------------
     @property

@@ -20,7 +20,18 @@ with three serving fast paths on top:
   prepared tree from the multi-point weight bank, selected from live
   telemetry (logit margins, queue pressure, cycle budget) with zero
   weight-side work per switch. ``self.telemetry`` accumulates mode
-  occupancy, estimated MAC cycles saved, and switch counts.
+  occupancy, estimated MAC cycles saved, and switch counts;
+* **self-speculative decoding** (``repro.spec``): pass
+  ``speculate=SpecConfig(...)`` (plus a bank, or a controller that carries
+  one) and the decode loop becomes draft-k-then-verify rounds: a jitted scan
+  rolls the approximate execution point ``k`` tokens forward into the cache
+  region past each slot's committed index, then ONE accurate multi-token
+  forward verifies all ``k+1`` positions, accepts a draft prefix
+  (greedy exact-match / rejection sampling), and rolls the cache back to the
+  accepted length per slot. Greedy output is bit-identical to accurate-only
+  serving; ``self.spec_telemetry`` records acceptance and weight-pass cycle
+  savings. With a controller attached it picks the draft point each round,
+  fed by the verify logits' margins.
 
 SSM/hybrid/audio families keep the sequential prefill path (their recurrent
 state is carried step-by-step); the distributed story (cache shardings) lives
@@ -92,10 +103,11 @@ def _sample_slots(last, base_keys, counts, temps):
     return jnp.where(temps > 0.0, sampled, greedy)[:, None]
 
 
-def _margin(last):
-    """Top-2 logit margin per slot — the controller's confidence signal."""
-    top2 = jax.lax.top_k(last, 2)[0]
-    return top2[:, 0] - top2[:, 1]
+def top2_margin(logits):
+    """Top-2 logit margin along the last axis — the controller's confidence
+    signal (shared with the speculative verify step)."""
+    top2 = jax.lax.top_k(logits, 2)[0]
+    return top2[..., 0] - top2[..., 1]
 
 
 def make_serve_decode_step(model: ModelApi, ctx: EngineContext):
@@ -107,7 +119,7 @@ def make_serve_decode_step(model: ModelApi, ctx: EngineContext):
     def decode_serve(params, tokens, cache, base_keys, counts, temps):
         logits, cache = model.decode_step(params, tokens, cache, ctx)
         last = logits[:, -1, :].astype(jnp.float32)
-        return _sample_slots(last, base_keys, counts, temps), _margin(last), cache
+        return _sample_slots(last, base_keys, counts, temps), top2_margin(last), cache
 
     return decode_serve
 
@@ -119,7 +131,7 @@ def make_serve_prefill_step(model: ModelApi, ctx: EngineContext):
         logits, cache = model.decode_step(params, tokens, cache, ctx)
         last = logits[:, -1, :].astype(jnp.float32)
         counts = jnp.zeros((tokens.shape[0],), jnp.int32)  # first generated token
-        return _sample_slots(last, base_keys, counts, temps), _margin(last), cache
+        return _sample_slots(last, base_keys, counts, temps), top2_margin(last), cache
 
     return prefill_serve
 
@@ -158,6 +170,17 @@ class BatchedServer:
     pressure after every step, and ``self.telemetry`` accumulates occupancy,
     switch counts, and estimated MAC-cycle savings. ``params`` may stay the
     raw float tree in that case — the bank carries all serving weights.
+
+    ``speculate`` (a :class:`repro.spec.SpecConfig`) switches the decode loop
+    to self-speculative rounds served from a multi-point ``bank`` (defaulting
+    to ``controller.bank``): draft ``draft_len`` tokens at the draft point,
+    verify all of them plus a bonus position in one accurate multi-token
+    forward, commit the accepted prefix, roll the KV cache back. Requires a
+    scatterable (attention/MLA) cache family — recurrent state cannot roll
+    back. With a controller attached, the controller picks the draft point
+    per round; ``self.telemetry``'s cycle fields then describe draft-point
+    occupancy only, and ``self.spec_telemetry`` is the cycle-accounting
+    authority.
     """
 
     model: ModelApi
@@ -167,29 +190,62 @@ class BatchedServer:
     max_len: int = 256
     prepare_weights: bool = True
     controller: Optional[object] = None  # repro.runtime.ModeController
+    speculate: Optional[object] = None   # repro.spec.SpecConfig
+    bank: Optional[object] = None        # repro.runtime.MultiPointBank
 
     def __post_init__(self):
+        self._bank = self.bank
+        if self._bank is None and self.controller is not None:
+            self._bank = self.controller.bank
         if self.controller is not None:
             from repro.runtime import TelemetryRecorder
 
             self.telemetry = TelemetryRecorder.for_bank(self.controller.bank)
         else:
             self.telemetry = None
-            if self.prepare_weights:
+            if self.prepare_weights and self.speculate is None:
                 self.params = prepare_params(
                     self.params, self.ctx.policy, self.ctx.mode, specs=self.model.specs()
                 )
+        self.batched_prefill = self.model.cfg.family in _BATCHED_PREFILL_FAMILIES
+        self.spec = None
+        self.spec_telemetry = None
+        if self.speculate is not None:
+            from repro.spec import SpeculativeDecoder
+
+            if self._bank is None:
+                raise ValueError(
+                    "speculate= needs a multi-point weight bank: pass bank= "
+                    "or a controller that carries one"
+                )
+            if not self.batched_prefill:
+                raise ValueError(
+                    f"speculative serving needs a scatterable KV cache; the "
+                    f"{self.model.cfg.family!r} family carries recurrent "
+                    "state that cannot roll back past rejected drafts"
+                )
+            self.spec = SpeculativeDecoder(
+                self.model, self.ctx, self._bank, self.speculate
+            )
+            self.spec_telemetry = self.spec.telemetry
         self.decode = jax.jit(make_serve_decode_step(self.model, self.ctx))
         self.prefill = jax.jit(make_serve_prefill_step(self.model, self.ctx))
         self.cache = self.model.make_cache(self.slots, self.max_len, dtype=jnp.float32)
         self.active: Dict[int, Request] = {}
-        self.batched_prefill = self.model.cfg.family in _BATCHED_PREFILL_FAMILIES
         self._slot_keys = jnp.stack(
             [jax.random.PRNGKey(0)] * self.slots
         )  # (slots, 2) per-request PRNG streams
         self._slot_temps = np.zeros((self.slots,), np.float32)
+        self._slot_start = np.zeros((self.slots,), np.int32)  # committed KV rows
 
     def _serving_tree(self):
+        """The tree prefill / non-speculative decode executes at.
+
+        Speculative serving prefills at the VERIFY point so the committed
+        prompt KV is accurate — the bit-exactness guarantee starts there.
+        """
+        if self.spec is not None:
+            return self._bank.tree(self.spec.verify_point)
         return self.controller.tree() if self.controller is not None else self.params
 
     def _scatter_slot(self, slot: int, row_cache):
@@ -234,19 +290,39 @@ class BatchedServer:
         self._scatter_slot(slot, row)
         self._slot_keys = self._slot_keys.at[slot].set(base_key)
         self._slot_temps[slot] = temp
+        self._slot_start[slot] = len(prompt)
         req.generated = [int(np.asarray(tok)[0, 0])]
         req.margins = [float(np.asarray(margin)[0])]
         if self.telemetry is not None:
-            self.telemetry.record_prefill(self.controller.point, len(prompt))
+            point = (self.spec.verify_point if self.spec is not None
+                     else self.controller.point)
+            self.telemetry.record_prefill(point, len(prompt))
 
     def run(self, requests: List[Request]) -> Dict[int, List[int]]:
         """Serve requests to completion; returns rid -> generated tokens.
 
         Per-token top-2 margins land on each request's ``.margins``; with a
         controller attached, ``self.telemetry`` holds the adaptive-run record.
+        ``run`` is reusable: telemetry, controller state, and speculative
+        counters start fresh on every invocation.
         """
         for req in requests:  # reject before any state mutates
-            _checked_prompt(req)
+            prompt = _checked_prompt(req)
+            if self.spec is not None and (
+                len(prompt) + req.max_new + self.spec.draft_len > self.max_len
+            ):
+                raise ValueError(
+                    f"request {req.rid}: prompt ({len(prompt)}) + max_new "
+                    f"({req.max_new}) + draft_len ({self.spec.draft_len}) "
+                    f"exceeds max_len ({self.max_len}) — the verify forward "
+                    "needs draft_len rows of scratch headroom"
+                )
+        if self.telemetry is not None:
+            self.telemetry.reset()
+        if self.controller is not None:
+            self.controller.reset()
+        if self.spec is not None:
+            self.spec.reset()
         queue = list(requests)
         results: Dict[int, List[int]] = {}
         slot_of: Dict[int, int] = {}
@@ -264,39 +340,80 @@ class BatchedServer:
                 slot_of[req.rid] = slot
             if not self.active:
                 continue
-            toks = np.zeros((self.slots, 1), np.int32)
-            counts = np.zeros((self.slots,), np.int32)
-            for rid, req in self.active.items():
-                toks[slot_of[rid], 0] = req.generated[-1]
-                counts[slot_of[rid]] = len(req.generated)
-            sampled, margins, self.cache = self.decode(
-                self._serving_tree(), jnp.asarray(toks), self.cache,
-                self._slot_keys, jnp.asarray(counts), jnp.asarray(self._slot_temps),
-            )
-            sampled = np.asarray(sampled)
-            margins = np.asarray(margins)
-            if self.controller is not None:
-                from repro.runtime import StepSignals
-
-                active_margins = [float(margins[slot_of[r]]) for r in self.active]
-                point = self.controller.point  # the point this step executed at
-                self.telemetry.record_step(
-                    point, active=len(self.active), min_margin=min(active_margins)
-                )
-                self.controller.observe(StepSignals(
-                    active=len(self.active),
-                    queue_depth=len(queue),
-                    free_slots=len(free),
-                    min_margin=min(active_margins),
-                ))
-            done = []
-            for rid, req in self.active.items():
-                req.generated.append(int(sampled[slot_of[rid], 0]))
-                req.margins.append(float(margins[slot_of[rid]]))
-                if len(req.generated) >= req.max_new:
-                    done.append(rid)
+            if self.spec is not None:
+                self._spec_round(slot_of, len(queue), len(free))
+            else:
+                self._decode_round(slot_of, len(queue), len(free))
+            done = [r for r, q in self.active.items() if len(q.generated) >= q.max_new]
             for rid in done:
                 req = self.active.pop(rid)
                 results[rid] = req.generated
                 free.append(slot_of.pop(rid))
         return results
+
+    def _batch_state(self, slot_of):
+        """Pending token + generated count per slot for the active set."""
+        toks = np.zeros((self.slots, 1), np.int32)
+        counts = np.zeros((self.slots,), np.int32)
+        for rid, req in self.active.items():
+            toks[slot_of[rid], 0] = req.generated[-1]
+            counts[slot_of[rid]] = len(req.generated)
+        return toks, counts
+
+    def _observe(self, point, tokens, queue_depth, free_slots, min_margin):
+        from repro.runtime import StepSignals
+
+        self.telemetry.record_step(point, active=tokens, min_margin=min_margin)
+        self.controller.observe(StepSignals(
+            active=len(self.active),
+            queue_depth=queue_depth,
+            free_slots=free_slots,
+            min_margin=min_margin,
+        ))
+
+    def _decode_round(self, slot_of, queue_depth, free_slots):
+        """One classic single-token decode step over the active slots."""
+        toks, counts = self._batch_state(slot_of)
+        sampled, margins, self.cache = self.decode(
+            self._serving_tree(), jnp.asarray(toks), self.cache,
+            self._slot_keys, jnp.asarray(counts), jnp.asarray(self._slot_temps),
+        )
+        sampled = np.asarray(sampled)
+        margins = np.asarray(margins)
+        if self.controller is not None:
+            active_margins = [float(margins[slot_of[r]]) for r in self.active]
+            self._observe(self.controller.point, len(self.active),
+                          queue_depth, free_slots, min(active_margins))
+        for rid, req in self.active.items():
+            req.generated.append(int(sampled[slot_of[rid], 0]))
+            req.margins.append(float(margins[slot_of[rid]]))
+            self._slot_start[slot_of[rid]] += 1
+
+    def _spec_round(self, slot_of, queue_depth, free_slots):
+        """One draft-k-then-verify round over the active slots.
+
+        Each active request gains between 1 (first draft rejected) and
+        ``draft_len + 1`` (all accepted + bonus) tokens, clipped to its
+        ``max_new``; the KV cache comes back rolled back to the committed
+        length per slot.
+        """
+        toks, counts = self._batch_state(slot_of)
+        draft_point = self.controller.point if self.controller is not None else None
+        emitted, accepted, margins, self.cache, point = self.spec.round(
+            jnp.asarray(toks), self.cache, self._slot_keys, counts,
+            self._slot_temps, self._slot_start, draft_point=draft_point,
+        )
+        accs, emits, round_margins = [], [], []
+        for rid, req in self.active.items():
+            s = slot_of[rid]
+            n = min(int(accepted[s]) + 1, req.max_new - len(req.generated))
+            req.generated.extend(int(t) for t in emitted[s, :n])
+            req.margins.extend(float(m) for m in margins[s, :n])
+            self._slot_start[s] += int(accepted[s]) + 1
+            accs.append(int(accepted[s]))
+            emits.append(n)
+            round_margins.append(float(margins[s, :n].min()))
+        self.spec.telemetry.record_round(point, self.spec.verify_point, accs, emits)
+        if self.controller is not None:
+            self._observe(point, sum(emits), queue_depth, free_slots,
+                          min(round_margins))

@@ -1,0 +1,52 @@
+"""Self-speculative serving: draft on a shallow CORDIC point, verify deep.
+
+CARMEN's configuration registers trade CORDIC iteration depth for accuracy on
+the *same* weights and hardware (paper §II-C) — which is exactly the split
+speculative decoding needs, with zero extra model. This package turns the
+precision ladder of a :class:`repro.runtime.MultiPointBank` into wall-clock
+(and weight-pass) speedup per accepted token:
+
+* **draft** (:func:`make_draft_loop`): a jitted ``lax.scan`` rolls the
+  *approximate* execution point forward ``k`` tokens, one classic decode step
+  per token. Drafted KV rows land in the cache region PAST each slot's
+  committed index — the per-query-causal mask makes that region invisible to
+  committed positions, so it doubles as the scratch KV view; no copies.
+* **verify** (:func:`make_verify_step`): all ``k+1`` positions (the pending
+  token plus the k drafts) run through the *accurate* point in ONE multi-token
+  ``decode_step`` (the S>1 per-query-causal path), overwriting the drafted
+  rows with accurate KV before attention reads them. Acceptance is greedy
+  exact-match for ``temperature<=0`` slots and standard rejection sampling
+  (accept ``d`` with prob ``min(1, p(d)/q(d))``, resample the first rejection
+  from ``norm(max(p - q, 0))``) for sampled slots — the output distribution
+  is exactly the accurate point's.
+* **rollback** (:mod:`repro.spec.rollback`): committing ``a`` accepted drafts
+  plus one corrected/bonus token truncates each slot's cache to
+  ``start + a + 1`` rows by rewriting the per-slot write index — rows past the
+  accepted prefix become invisible and are overwritten next round.
+* **telemetry** (:class:`SpecTelemetry`): acceptance rate, emitted tokens per
+  verify step, and estimated cycle cost under the ``K*(depth+1)`` iterative-PE
+  model, where a multi-token verify streams the weight bank ONCE for all
+  ``k+1`` positions (weight-stationary PE array) — the quantity in which
+  speculation beats accurate-only serving.
+
+``BatchedServer(speculate=SpecConfig(...))`` is the serving integration; with
+a :class:`repro.runtime.ModeController` attached the controller picks the
+draft point per round and its margin/pressure signals are fed from the verify
+logits.
+"""
+from .config import SpecConfig
+from .decoding import make_draft_loop, make_verify_step
+from .engine import SpeculativeDecoder
+from .rollback import cache_positions, rollback, with_cache_positions
+from .telemetry import SpecTelemetry
+
+__all__ = [
+    "SpecConfig",
+    "SpecTelemetry",
+    "SpeculativeDecoder",
+    "cache_positions",
+    "make_draft_loop",
+    "make_verify_step",
+    "rollback",
+    "with_cache_positions",
+]

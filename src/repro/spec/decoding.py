@@ -1,0 +1,153 @@
+"""Jitted draft / verify steps and the acceptance rule.
+
+Distributions are *temperature-adjusted targets*: ``temp<=0`` slots use the
+one-hot argmax (so acceptance degenerates to greedy exact-match and the
+emitted stream is bit-identical to accurate-only decoding), ``temp>0`` slots
+use ``softmax(logits/temp)`` with the standard speculative-sampling
+correction, which preserves the accurate point's output distribution exactly.
+
+PRNG discipline: every slot owns a base key (the server's per-request
+stream); each round folds in the round counter, then separate lanes for draft
+sampling (0), acceptance uniforms (1), and the correction/bonus sample (2),
+with token-index folds inside a lane. A rejected position re-drafted next
+round therefore sees fresh randomness — reusing the same uniform across
+rounds would bias re-drafts toward re-rejection.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import ModelApi
+from repro.core import EngineContext
+from repro.serve.engine import top2_margin
+
+_DRAFT_LANE, _ACCEPT_LANE, _CORRECT_LANE = 0, 1, 2
+
+
+def _round_keys(base_keys, round_idx):
+    """(B, 2) per-request keys -> per-round keys (fresh randomness per round)."""
+    return jax.vmap(lambda k: jax.random.fold_in(k, round_idx))(base_keys)
+
+
+def _lane(keys, lane):
+    return jax.vmap(lambda k: jax.random.fold_in(k, lane))(keys)
+
+
+def _temp_dist(logits, temps):
+    """logits (B, V) f32 + temps (B,) -> target/draft distribution (B, V)."""
+    v = logits.shape[-1]
+    greedy = jax.nn.one_hot(jnp.argmax(logits, axis=-1), v, dtype=jnp.float32)
+    soft = jax.nn.softmax(logits / jnp.maximum(temps, 1e-6)[:, None], axis=-1)
+    return jnp.where((temps > 0.0)[:, None], soft, greedy)
+
+
+def make_draft_loop(model: ModelApi, ctx: EngineContext, k: int):
+    """k chained decode steps at the draft point, as one jit-able callable.
+
+    ``(tree, tokens (B,1), cache, base_keys (B,2), counts (B,), temps (B,),
+    round_idx)`` -> ``(draft_tokens (B,k), draft_probs (B,k,V) f32, cache)``.
+
+    The cache comes back with k approximate KV rows written past each slot's
+    committed index (the scratch region) and its index advanced by k — the
+    verify step rewinds it before re-deriving those rows accurately.
+    """
+
+    def draft_loop(tree, tokens, cache, base_keys, counts, temps, round_idx):
+        draft_keys = _lane(_round_keys(base_keys, round_idx), _DRAFT_LANE)
+
+        def step(carry, i):
+            tok, cache = carry
+            logits, cache = model.decode_step(tree, tok, cache, ctx)
+            last = logits[:, -1, :].astype(jnp.float32)
+            q = _temp_dist(last, temps)
+            keys_i = jax.vmap(jax.random.fold_in)(draft_keys, counts + i)
+            sampled = jax.vmap(jax.random.categorical)(
+                keys_i, last / jnp.maximum(temps, 1e-6)[:, None]
+            )
+            nxt = jnp.where(temps > 0.0, sampled, jnp.argmax(last, axis=-1))
+            nxt = nxt.astype(jnp.int32)[:, None]
+            return (nxt, cache), (nxt[:, 0], q)
+
+        (_, cache), (toks, probs) = jax.lax.scan(
+            step, (tokens, cache), jnp.arange(k)
+        )
+        return jnp.moveaxis(toks, 0, 1), jnp.moveaxis(probs, 0, 1), cache
+
+    return draft_loop
+
+
+def make_verify_step(model: ModelApi, ctx: EngineContext, k: int):
+    """One multi-token accurate forward over the pending token + k drafts.
+
+    ``(tree, tokens (B,1), draft_tokens (B,k), draft_probs (B,k,V), cache,
+    start (B,), base_keys, counts, temps, round_idx)`` ->
+    ``(emitted (B,k+1), accepted (B,), margins (B,k+1), cache)``.
+
+    ``start`` is each slot's committed row count BEFORE drafting; the cache's
+    index (advanced by the draft loop) is rewound to it so ``decode_step``
+    writes accurate KV over the drafted scratch rows. Position ``i`` of the
+    verify logits is the accurate next-token distribution after draft ``i``
+    tokens — exactly what sequential accurate decoding would compute, given
+    multi-token/token-by-token bit-parity (test-asserted).
+
+    ``emitted[b, :accepted[b]+1]`` is the committed stream extension: the
+    accepted draft prefix plus one corrected (first rejection, resampled from
+    ``norm(max(p-q,0))``) or bonus (all accepted, sampled from the k-th
+    accurate distribution) token. On exit the cache is rolled back to
+    ``start + accepted + 1`` committed rows per slot.
+    """
+    from .rollback import with_cache_positions
+
+    def verify(tree, tokens, draft_tokens, draft_probs, cache, start,
+               base_keys, counts, temps, round_idx):
+        b = tokens.shape[0]
+        cache = with_cache_positions(cache, start)
+        tok_in = jnp.concatenate([tokens, draft_tokens], axis=1)  # (B, k+1)
+        logits, cache = model.decode_step(tree, tok_in, cache, ctx)
+        logits = logits.astype(jnp.float32)  # (B, k+1, V)
+        p = jax.vmap(_temp_dist, in_axes=(1, None), out_axes=1)(logits, temps)
+
+        # leading-prefix acceptance: accept d_i iff u_i * q(d_i) < p(d_i)
+        # (the division-free form of u < p/q; greedy slots have one-hot p, q)
+        gather = lambda dist, tok: jnp.take_along_axis(
+            dist, tok[..., None], axis=-1
+        )[..., 0]
+        q_at = gather(draft_probs, draft_tokens)  # (B, k)
+        p_at = gather(p[:, :k], draft_tokens)     # (B, k)
+        rkeys = _round_keys(base_keys, round_idx)
+        u = jax.vmap(
+            lambda key: jax.random.uniform(jax.random.fold_in(key, _ACCEPT_LANE), (k,))
+        )(rkeys)
+        accept = u * q_at < p_at
+        accepted = jnp.sum(jnp.cumprod(accept.astype(jnp.int32), axis=1), axis=1)
+
+        # correction token: residual distribution at the first rejection,
+        # or the bonus distribution (position k) when every draft survived
+        resid = jnp.maximum(p[:, :k] - draft_probs, 0.0)
+        at = jnp.minimum(accepted, k - 1)
+        resid_at = jnp.take_along_axis(resid, at[:, None, None], axis=1)[:, 0]
+        p_reject = jnp.take_along_axis(p[:, :k], at[:, None, None], axis=1)[:, 0]
+        rsum = resid_at.sum(-1, keepdims=True)
+        # measure-zero guard: q == p makes the residual vanish; fall back to p
+        resid_at = jnp.where(rsum > 0.0, resid_at / jnp.maximum(rsum, 1e-30), p_reject)
+        dist = jnp.where((accepted == k)[:, None], p[:, k], resid_at)  # (B, V)
+        ckeys = jax.vmap(jax.random.fold_in)(_lane(rkeys, _CORRECT_LANE), counts + accepted)
+        sampled = jax.vmap(jax.random.categorical)(ckeys, jnp.log(dist + 1e-30))
+        correction = jnp.where(
+            temps > 0.0, sampled, jnp.argmax(dist, axis=-1)
+        ).astype(jnp.int32)
+
+        pos = jnp.arange(k + 1)[None, :]
+        drafts_pad = jnp.concatenate(
+            [draft_tokens, jnp.zeros((b, 1), jnp.int32)], axis=1
+        )
+        emitted = jnp.where(
+            pos < accepted[:, None],
+            drafts_pad,
+            jnp.where(pos == accepted[:, None], correction[:, None], 0),
+        )
+        cache = with_cache_positions(cache, start + accepted + 1)
+        return emitted, accepted, top2_margin(logits), cache
+
+    return verify

@@ -1,0 +1,90 @@
+"""SpeculativeDecoder: the jitted draft/verify pair bound to a weight bank.
+
+One decoder owns one compiled draft loop and one compiled verify step (both
+keyed on the static draft length); the draft *tree* is an argument, so an
+attached mode controller can hand a different resident bank tree each round
+with zero recompilation beyond the first visit to each point.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import EngineContext
+from repro.models import ModelApi
+from repro.runtime.bank import MultiPointBank
+
+from .config import SpecConfig
+from .decoding import make_draft_loop, make_verify_step
+from .telemetry import SpecTelemetry
+
+
+class SpeculativeDecoder:
+    """Draft-k-then-verify serving rounds over a multi-point weight bank."""
+
+    def __init__(self, model: ModelApi, ctx: EngineContext,
+                 bank: MultiPointBank, cfg: Optional[SpecConfig] = None):
+        self.cfg = cfg or SpecConfig()
+        self.bank = bank
+        self.verify_point = self.cfg.verify_point or bank.reference
+        for name in (self.cfg.draft_point, self.verify_point):
+            if name is not None and name not in bank.names:
+                raise ValueError(
+                    f"unknown execution point {name!r}; bank has {bank.names}"
+                )
+        # default draft point: the cheapest rung of the ladder
+        self.default_draft_point = self.cfg.draft_point or bank.names[0]
+        if self.default_draft_point == self.verify_point:
+            # catches the post-resolution collisions SpecConfig cannot see
+            # (draft_point == bank reference, or verify_point == cheapest)
+            raise ValueError(
+                f"draft point {self.default_draft_point!r} is the verify "
+                "point: every round would pay k full-cost draft passes on "
+                "top of the verify pass — pick a cheaper draft point"
+            )
+        self.draft_loop = jax.jit(make_draft_loop(model, ctx, self.cfg.draft_len))
+        self.verify = jax.jit(make_verify_step(model, ctx, self.cfg.draft_len))
+        self.telemetry = SpecTelemetry.for_bank(bank, self.cfg.draft_len)
+        self._round = 0
+
+    @property
+    def draft_len(self) -> int:
+        return self.cfg.draft_len
+
+    def reset(self) -> None:
+        """Fresh telemetry and round counter (PRNG folds restart), so
+        consecutive ``BatchedServer.run`` calls are reproducible."""
+        self.telemetry.reset()
+        self._round = 0
+
+    def round(self, tokens, cache, base_keys, counts, temps, start, *,
+              draft_point: Optional[str] = None):
+        """One draft+verify round over the whole slot batch.
+
+        ``tokens`` (B,1) pending token per slot, ``start`` (B,) committed row
+        counts, ``counts`` (B,) generated-token indices (PRNG folds). Returns
+        ``(emitted (B,k+1) np, accepted (B,) np, margins (B,k+1) np, cache)``
+        with the cache rolled back to ``start + accepted + 1`` rows per slot.
+        The caller records telemetry (it knows which slots are active).
+        """
+        point = draft_point or self.default_draft_point
+        round_idx = jnp.int32(self._round)
+        self._round += 1
+        counts = jnp.asarray(counts, jnp.int32)
+        temps = jnp.asarray(temps, jnp.float32)
+        start = jnp.asarray(start, jnp.int32)
+        draft_toks, draft_probs, cache = self.draft_loop(
+            self.bank.tree(point), tokens, cache, base_keys, counts, temps,
+            round_idx,
+        )
+        emitted, accepted, margins, cache = self.verify(
+            self.bank.tree(self.verify_point), tokens, draft_toks, draft_probs,
+            cache, start, base_keys, counts, temps, round_idx,
+        )
+        return (
+            np.asarray(emitted), np.asarray(accepted), np.asarray(margins),
+            cache, point,
+        )

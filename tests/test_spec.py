@@ -1,0 +1,343 @@
+"""Self-speculative serving: draft/verify parity, acceptance, rollback.
+
+The contracts under test:
+* multi-token ``decode_step`` (S>1 against a populated KV cache) is
+  bit-identical to token-by-token decode for dense / MoE / MLA families —
+  the foundation the verifier leans on;
+* greedy speculative serving emits the SAME token stream as accurate-only
+  serving, for every family with a scatterable KV cache;
+* KV rollback truncates drafted rows past the accepted prefix (stale rows
+  are invisible to later queries);
+* the speculative machinery composes with the mode controller (controller
+  picks the draft point, margins flow from verify logits) and
+  ``BatchedServer.run`` is reusable (fresh telemetry/controller per call).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.core import EngineContext, FXP8, FXP16, PrecisionPolicy
+from repro.models import get_model
+from repro.runtime import ControllerConfig, ModeController, build_bank, default_points
+from repro.serve.engine import BatchedServer, Request
+from repro.spec import SpecConfig, SpecTelemetry, cache_positions, rollback
+from repro.spec.decoding import _temp_dist
+
+EXACT = EngineContext(mode="exact", compute_dtype=jnp.float32)
+
+# dense / MoE (interleaved) / MLA+MoE — the three KV-cache layouts
+PARITY_ARCHS = ["olmo-1b", "llama4-maverick-400b-a17b", "deepseek-v3-671b"]
+
+
+def _setup(arch):
+    cfg = reduced(get_config(arch))
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+@pytest.fixture(scope="module")
+def olmo():
+    return _setup("olmo-1b")
+
+
+@pytest.fixture(scope="module")
+def olmo_bank(olmo):
+    _, model, params = olmo
+    return build_bank(params, "carmen", default_points(FXP16, hifi_fmt=None),
+                      specs=model.specs())
+
+
+def _requests(cfg, n, *, prompt_len=5, max_new=10, seed=2, **kw):
+    rng = np.random.default_rng(seed)
+    return [
+        Request(i, rng.integers(0, cfg.vocab_size, prompt_len).astype(np.int32),
+                max_new, **kw)
+        for i in range(n)
+    ]
+
+
+# ---------------------------------------------------------------------------
+# multi-token decode bit-parity (the verifier's correctness foundation)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("arch", PARITY_ARCHS)
+def test_multitoken_decode_matches_token_by_token(arch):
+    """S>1 decode against a populated cache == S sequential decode steps.
+
+    Float matmul reduction order is shape-dependent, so raw logits agree to
+    ~1e-7 rather than bitwise; the contract the verifier leans on is exact
+    ARGMAX parity (greedy token stream) plus tight numeric agreement — the
+    emitted-token bit-identity is asserted end-to-end below.
+    """
+    cfg, model, params = _setup(arch)
+    rng = np.random.default_rng(0)
+    prompt = rng.integers(0, cfg.vocab_size, (1, 5)).astype(np.int32)
+    block = rng.integers(0, cfg.vocab_size, (1, 4)).astype(np.int32)
+
+    cache = model.make_cache(1, 24, dtype=jnp.float32)
+    _, cache = model.decode_step(params, jnp.asarray(prompt), cache, EXACT)
+
+    seq_logits, c = [], cache
+    for t in block[0]:
+        lg, c = model.decode_step(params, jnp.asarray([[t]]), c, EXACT)
+        seq_logits.append(np.asarray(lg)[:, 0])
+    seq_logits = np.stack(seq_logits, axis=1)
+    blk_logits, _ = model.decode_step(params, jnp.asarray(block), cache, EXACT)
+    blk_logits = np.asarray(blk_logits)
+    np.testing.assert_array_equal(
+        seq_logits.argmax(-1), blk_logits.argmax(-1)
+    )
+    np.testing.assert_allclose(seq_logits, blk_logits, atol=1e-5, rtol=0)
+
+
+def test_multitoken_decode_parity_quantized(olmo):
+    """The parity also holds through the prepared carmen engine."""
+    cfg, model, params = olmo
+    ctx = EngineContext(mode="carmen", policy=PrecisionPolicy.accurate(FXP8),
+                        compute_dtype=jnp.float32)
+    from repro.core import prepare_params
+
+    tree = prepare_params(params, ctx.policy, "carmen", specs=model.specs())
+    prompt = np.array([[3, 11, 7]], np.int32)
+    block = np.array([[9, 2, 5]], np.int32)
+    cache = model.make_cache(1, 16, dtype=jnp.float32)
+    _, cache = model.decode_step(tree, jnp.asarray(prompt), cache, ctx)
+    seq, c = [], cache
+    for t in block[0]:
+        lg, c = model.decode_step(tree, jnp.asarray([[t]]), c, ctx)
+        seq.append(np.asarray(lg)[:, 0])
+    seq = np.stack(seq, axis=1)
+    blk = np.asarray(model.decode_step(tree, jnp.asarray(block), cache, ctx)[0])
+    np.testing.assert_array_equal(seq.argmax(-1), blk.argmax(-1))
+    np.testing.assert_allclose(seq, blk, atol=1e-5, rtol=0)
+
+
+# ---------------------------------------------------------------------------
+# rollback
+# ---------------------------------------------------------------------------
+
+
+def test_rollback_hides_drafted_rows(olmo):
+    """Decoding garbage past the committed index, then rolling back, leaves
+    the next real decode bit-identical to never having drafted at all."""
+    cfg, model, params = olmo
+    prompt = np.array([[4, 9, 1]], np.int32)
+    cache = model.make_cache(1, 16, dtype=jnp.float32)
+    _, cache = model.decode_step(params, jnp.asarray(prompt), cache, EXACT)
+    committed = cache_positions(cache)
+    np.testing.assert_array_equal(np.asarray(committed), [3])
+
+    want, _ = model.decode_step(params, jnp.asarray([[7]]), cache, EXACT)
+
+    # draft three garbage tokens (cache rows + index advance), then roll back
+    drafted = cache
+    for t in (250, 251, 252):
+        _, drafted = model.decode_step(params, jnp.asarray([[t]]), drafted, EXACT)
+    np.testing.assert_array_equal(np.asarray(cache_positions(drafted)), [6])
+    restored = rollback(drafted, committed)
+    np.testing.assert_array_equal(np.asarray(cache_positions(restored)), [3])
+    got, _ = model.decode_step(params, jnp.asarray([[7]]), restored, EXACT)
+    np.testing.assert_array_equal(np.asarray(want), np.asarray(got))
+
+
+def test_rollback_rejects_recurrent_state():
+    cfg, model, params = _setup("mamba2-780m")
+    cache = model.make_cache(1, 8, dtype=jnp.float32)
+    with pytest.raises(ValueError, match="write index"):
+        cache_positions(cache)
+
+
+# ---------------------------------------------------------------------------
+# greedy speculative serving == accurate-only serving (bit-identical)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("arch", ["olmo-1b", "internvl2-2b",
+                                  "llama4-maverick-400b-a17b",
+                                  "deepseek-v3-671b"])
+def test_greedy_spec_bit_identical_to_accurate(arch):
+    """Every batched-prefill family (and the MLA latent-cache layout):
+    speculative greedy == accurate greedy, token for token."""
+    cfg, model, params = _setup(arch)
+    ctx = EngineContext(mode="carmen", policy=PrecisionPolicy.accurate(FXP16),
+                        compute_dtype=jnp.float32)
+    bank = build_bank(params, "carmen", default_points(FXP16, hifi_fmt=None),
+                      specs=model.specs())
+    ref = BatchedServer(model, ctx, bank.tree("accurate"), slots=2, max_len=32,
+                        prepare_weights=False).run(_requests(cfg, 3, max_new=8))
+    srv = BatchedServer(model, ctx, params, slots=2, max_len=32,
+                        speculate=SpecConfig(draft_len=3), bank=bank)
+    out = srv.run(_requests(cfg, 3, max_new=8))
+    assert out == ref
+    tele = srv.spec_telemetry.summary()
+    assert tele["emitted"] == sum(len(v) - 1 for v in ref.values())
+    assert tele["acceptance_rate"] > 0.0
+
+
+def test_spec_margins_match_accurate_serving(olmo, olmo_bank):
+    """Verify-logit margins land per emitted token, equal to the accurate
+    run's margins (same logits, different batching)."""
+    cfg, model, params = olmo
+    ctx = EngineContext(mode="carmen", policy=PrecisionPolicy.accurate(FXP16),
+                        compute_dtype=jnp.float32)
+    ref_reqs = _requests(cfg, 2, max_new=7)
+    BatchedServer(model, ctx, olmo_bank.tree("accurate"), slots=2, max_len=32,
+                  prepare_weights=False).run(ref_reqs)
+    spec_reqs = _requests(cfg, 2, max_new=7)
+    BatchedServer(model, ctx, params, slots=2, max_len=32,
+                  speculate=SpecConfig(draft_len=3), bank=olmo_bank).run(spec_reqs)
+    for ref, got in zip(ref_reqs, spec_reqs):
+        assert len(got.margins) == len(got.generated) == 7
+        np.testing.assert_allclose(got.margins, ref.margins, atol=1e-4)
+
+
+def test_spec_single_slot_and_draft_len_one(olmo, olmo_bank):
+    cfg, model, params = olmo
+    ctx = EngineContext(mode="carmen", policy=PrecisionPolicy.accurate(FXP16),
+                        compute_dtype=jnp.float32)
+    ref = BatchedServer(model, ctx, olmo_bank.tree("accurate"), slots=1,
+                        max_len=32, prepare_weights=False).run(
+        _requests(cfg, 2, max_new=6))
+    out = BatchedServer(model, ctx, params, slots=1, max_len=32,
+                        speculate=SpecConfig(draft_len=1), bank=olmo_bank).run(
+        _requests(cfg, 2, max_new=6))
+    assert out == ref
+
+
+def test_spec_sampled_requests_run_and_respect_max_new(olmo, olmo_bank):
+    """Rejection sampling path: correct lengths, reproducible per seed."""
+    cfg, model, params = olmo
+    ctx = EngineContext(mode="carmen", policy=PrecisionPolicy.accurate(FXP16),
+                        compute_dtype=jnp.float32)
+    serve = lambda: BatchedServer(
+        model, ctx, params, slots=2, max_len=32,
+        speculate=SpecConfig(draft_len=3), bank=olmo_bank,
+    ).run(_requests(cfg, 3, max_new=8, temperature=1.2))
+    a, b = serve(), serve()
+    assert a == b  # same seeds, same schedule -> same streams
+    assert all(len(v) == 8 for v in a.values())
+
+
+# ---------------------------------------------------------------------------
+# composition with the mode controller + server reuse
+# ---------------------------------------------------------------------------
+
+
+def test_controller_picks_draft_point_and_margins_flow(olmo, olmo_bank):
+    cfg, model, params = olmo
+    ctx = EngineContext(mode="carmen", policy=PrecisionPolicy.accurate(FXP16),
+                        compute_dtype=jnp.float32)
+    ctrl = ModeController(olmo_bank, ControllerConfig(pin="approx"))
+    srv = BatchedServer(model, ctx, params, slots=2, max_len=32,
+                        speculate=SpecConfig(draft_len=3), controller=ctrl)
+    ref = BatchedServer(model, ctx, olmo_bank.tree("accurate"), slots=2,
+                        max_len=32, prepare_weights=False).run(
+        _requests(cfg, 3, max_new=8))
+    out = srv.run(_requests(cfg, 3, max_new=8))
+    assert out == ref  # verify point guards accuracy whatever the draft point
+    spec = srv.spec_telemetry.summary()
+    assert spec["rounds_by_draft_point"]["approx"] == spec["rounds"] > 0
+    # margins from the verify logits reached the controller's telemetry
+    assert len(srv.telemetry.min_margins) == spec["rounds"]
+    # prefill charged at the verify point, drafts occupy the approx point
+    assert srv.telemetry.tokens_by_point["accurate"] >= 3 * 5
+
+
+def test_run_reuse_fresh_state(olmo, olmo_bank):
+    """Satellite contract: consecutive run() calls are independent — fresh
+    telemetry (incl. prefill charges), controller state, spec counters."""
+    cfg, model, params = olmo
+    ctx = EngineContext(mode="carmen", policy=PrecisionPolicy.accurate(FXP16),
+                        compute_dtype=jnp.float32)
+    ctrl = ModeController(olmo_bank, ControllerConfig(cycle_budget=0.8))
+    srv = BatchedServer(model, ctx, params, slots=2, max_len=32, controller=ctrl)
+    out1 = srv.run(_requests(cfg, 4, max_new=6))
+    tele1 = srv.telemetry.summary()
+    point1 = ctrl.point
+    out2 = srv.run(_requests(cfg, 4, max_new=6))
+    assert out1 == out2
+    assert srv.telemetry.summary() == tele1
+    assert ctrl.point == point1
+
+    spec_srv = BatchedServer(model, ctx, params, slots=2, max_len=32,
+                             speculate=SpecConfig(draft_len=2), bank=olmo_bank)
+    # sampled requests: the round counter (PRNG folds) must restart too
+    s1 = spec_srv.run(_requests(cfg, 3, max_new=6, temperature=1.1))
+    spec1 = spec_srv.spec_telemetry.summary()
+    s2 = spec_srv.run(_requests(cfg, 3, max_new=6, temperature=1.1))
+    assert s1 == s2
+    assert spec_srv.spec_telemetry.summary() == spec1
+
+
+# ---------------------------------------------------------------------------
+# configuration / validation / unit pieces
+# ---------------------------------------------------------------------------
+
+
+def test_spec_config_validation(olmo, olmo_bank):
+    cfg, model, params = olmo
+    ctx = EngineContext(mode="carmen", policy=PrecisionPolicy.accurate(FXP16),
+                        compute_dtype=jnp.float32)
+    with pytest.raises(ValueError, match="draft_len"):
+        SpecConfig(draft_len=0)
+    with pytest.raises(ValueError, match="cheaper draft point"):
+        SpecConfig(draft_point="accurate", verify_point="accurate")
+    from repro.spec import SpeculativeDecoder
+
+    with pytest.raises(ValueError, match="unknown execution point"):
+        SpeculativeDecoder(model, ctx, olmo_bank, SpecConfig(draft_point="fp4"))
+    # post-resolution collisions: drafting at the (defaulted) verify point
+    with pytest.raises(ValueError, match="cheaper draft point"):
+        SpeculativeDecoder(model, ctx, olmo_bank,
+                           SpecConfig(draft_point="accurate"))
+    with pytest.raises(ValueError, match="cheaper draft point"):
+        SpeculativeDecoder(model, ctx, olmo_bank,
+                           SpecConfig(verify_point="approx"))
+    with pytest.raises(ValueError, match="weight bank"):
+        BatchedServer(model, ctx, params, slots=1, max_len=32,
+                      speculate=SpecConfig())
+    srv = BatchedServer(model, ctx, params, slots=1, max_len=16,
+                        speculate=SpecConfig(draft_len=4), bank=olmo_bank)
+    with pytest.raises(ValueError, match="scratch headroom"):
+        srv.run(_requests(cfg, 1, prompt_len=6, max_new=8))
+
+
+def test_spec_rejects_recurrent_families(olmo_bank):
+    cfg, model, params = _setup("mamba2-780m")
+    ctx = EngineContext(mode="carmen", policy=PrecisionPolicy.accurate(FXP16),
+                        compute_dtype=jnp.float32)
+    with pytest.raises(ValueError, match="roll back"):
+        BatchedServer(model, ctx, params, slots=1, max_len=32,
+                      speculate=SpecConfig(), bank=olmo_bank)
+
+
+def test_temp_dist_greedy_and_softmax():
+    logits = jnp.asarray([[1.0, 3.0, 2.0], [0.0, 0.0, 5.0]], jnp.float32)
+    greedy = _temp_dist(logits, jnp.asarray([0.0, 0.0]))
+    np.testing.assert_array_equal(np.asarray(greedy),
+                                  [[0, 1, 0], [0, 0, 1]])
+    soft = np.asarray(_temp_dist(logits, jnp.asarray([2.0, 2.0])))
+    np.testing.assert_allclose(
+        soft, np.asarray(jax.nn.softmax(logits / 2.0, axis=-1)), rtol=1e-6
+    )
+
+
+def test_spec_telemetry_accounting():
+    tele = SpecTelemetry({"approx": 60.0, "accurate": 100.0}, "accurate",
+                         draft_len=4)
+    tele.record_round("approx", "accurate", accepted=[4, 1], emitted=[5, 2])
+    s = tele.summary()
+    assert s["rounds"] == 1 and s["drafted"] == 8
+    assert s["accepted"] == 5 and s["emitted"] == 7
+    assert s["acceptance_rate"] == pytest.approx(5 / 8)
+    assert s["tokens_per_step"] == pytest.approx(7 / 2)
+    # per slot-round: 4 draft passes @60 + 1 verify pass @100 = 340
+    assert s["est_weight_pass_cycles"] == 2 * 340.0
+    assert s["accurate_only_cycles"] == 7 * 100.0
+    assert s["est_cycle_savings_frac"] == pytest.approx(1 - 680 / 700, abs=1e-4)
+    tele.reset()
+    assert tele.summary()["rounds"] == 0 and tele.summary()["emitted"] == 0
