@@ -1,15 +1,18 @@
-"""Shared benchmark plumbing: argparse boilerplate, model setup, JSON records.
+"""Shared benchmark plumbing: argparse boilerplate, model setup, timing, JSON.
 
 Every JSON benchmark (``bench_prepared`` / ``bench_adaptive`` /
-``bench_speculative``) shares the same skeleton: ``--arch/--full-size/--out``
-(+ optional ``--smoke`` for the CI variant), a reduced-model build, and a
-print-and-write JSON record. It lives here once.
+``bench_speculative`` / ``bench_serving``) shares the same skeleton:
+``--arch/--full-size/--out`` (+ optional ``--smoke`` for the CI variant), a
+reduced-model build, the :func:`timed` helper (warmup iteration +
+``block_until_ready`` so records never include compile time or pending
+dispatches), and a print-and-write JSON record. It lives here once.
 """
 from __future__ import annotations
 
 import argparse
 import json
 import os
+import time
 
 import jax
 import numpy as np
@@ -35,11 +38,14 @@ def bench_parser(description: str, *, default_out: str,
     return ap
 
 
-def load_model(arch: str, *, full_size: bool = False):
-    """(cfg, model, params) for the benchmark workload (reduced by default)."""
+def load_model(arch: str, *, full_size: bool = False, layers: int = 2,
+               d_model: int = 128):
+    """(cfg, model, params) for the benchmark workload (reduced by default;
+    ``layers``/``d_model`` shrink the reduced config further for
+    dispatch-bound smoke runs)."""
     cfg = get_config(arch)
     if not full_size:
-        cfg = reduce_cfg(cfg)
+        cfg = reduce_cfg(cfg, layers=layers, d_model=d_model)
     model = get_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
     return cfg, model, params
@@ -63,6 +69,23 @@ def make_requests(cfg, n, *, prompt_len, max_new, seed=1, temperature=0.0):
                 max_new, temperature=temperature)
         for i in range(n)
     ]
+
+
+def timed(fn, *, warmup: int = 1):
+    """Honest wall-clock for ``fn``: ``(seconds, result)``.
+
+    Runs ``warmup`` discarded iterations first (jit compilation, bucket
+    tracing, autotuning all land there), then times one call with
+    ``jax.block_until_ready`` on the result so async dispatch cannot leak
+    pending work past the clock. Every benchmark's timing goes through here;
+    callers that want best-of-N (``bench_serving``) loop over
+    ``timed(fn, warmup=0)`` themselves so they can interleave contenders.
+    """
+    for _ in range(warmup):
+        jax.block_until_ready(fn())
+    t0 = time.perf_counter()
+    out = jax.block_until_ready(fn())
+    return time.perf_counter() - t0, out
 
 
 def emit_record(record, out: str):

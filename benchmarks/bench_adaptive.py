@@ -16,8 +16,6 @@ high-confidence tokens, split at the median accurate-run top-2 margin).
 """
 from __future__ import annotations
 
-import time
-
 import jax.numpy as jnp
 import numpy as np
 
@@ -37,6 +35,7 @@ from ._common import (
     emit_record,
     load_model,
     make_requests,
+    timed,
 )
 
 
@@ -52,17 +51,12 @@ def bench_load(model, cfg, params, bank, n_requests, *, slots, prompt_len,
     # the bank already holds the all-accurate tree — no second prepare pass
     ref_server = BatchedServer(model, ctx, bank.tree(bank.reference), slots=slots,
                                max_len=max_len, prepare_weights=False)
-    t0 = time.perf_counter()
-    ref_out = ref_server.run(ref_reqs)
-    ref_dt = time.perf_counter() - t0
+    ref_dt, ref_out = timed(lambda: ref_server.run(ref_reqs))
 
     controller = ModeController(bank, ControllerConfig(cycle_budget=cycle_budget))
     adp_server = BatchedServer(model, ctx, params, slots=slots, max_len=max_len,
                                controller=controller)
-    adp_reqs = workload()
-    t0 = time.perf_counter()
-    adp_out = adp_server.run(adp_reqs)
-    adp_dt = time.perf_counter() - t0
+    adp_dt, adp_out = timed(lambda: adp_server.run(workload()))
     tele = adp_server.telemetry.summary()
 
     seq_agree = float(np.mean([

@@ -12,15 +12,13 @@ writes ``artifacts/bench/bench_prepared.json`` (and prints it).
 """
 from __future__ import annotations
 
-import time
-
 import jax
 import jax.numpy as jnp
 
 from repro.core import EngineContext, FXP8, PrecisionPolicy, prepare_params
 from repro.serve.engine import make_decode_sample_step
 
-from ._common import base_record, bench_parser, emit_record, load_model
+from ._common import base_record, bench_parser, emit_record, load_model, timed
 
 
 def bench_mode(model, params, mode: str, *, slots: int, max_len: int, steps: int):
@@ -30,15 +28,15 @@ def bench_mode(model, params, mode: str, *, slots: int, max_len: int, steps: int
     rec = {}
     for label, p in (("per_call", params), ("prepared", prepared)):
         decode = jax.jit(make_decode_sample_step(model, ctx))
-        cache = model.make_cache(slots, max_len, dtype=jnp.float32)
-        toks = jnp.zeros((slots, 1), jnp.int32)
-        tok, cache = decode(p, toks, cache)  # compile + first step
-        jax.block_until_ready(tok)
-        t0 = time.perf_counter()
-        for _ in range(steps):
-            tok, cache = decode(p, tok, cache)
-        jax.block_until_ready(tok)
-        dt = time.perf_counter() - t0
+
+        def run_steps():
+            cache = model.make_cache(slots, max_len, dtype=jnp.float32)
+            tok = jnp.zeros((slots, 1), jnp.int32)
+            for _ in range(steps):
+                tok, cache = decode(p, tok, cache)
+            return tok
+
+        dt, _ = timed(run_steps)  # warmup run eats compile + first dispatch
         rec[label] = {
             "step_ms": round(1e3 * dt / steps, 3),
             "tok_s": round(steps * slots / dt, 1),

@@ -1,0 +1,197 @@
+"""Decode-burst serving benchmark: tokens/sec + host round-trips per burst size.
+
+The decode hot loop's cost on small models is dominated by what happens
+BETWEEN engine steps — Python dispatch, (B, 1) token transfers, numpy
+bookkeeping — not by the steps themselves. This benchmark measures exactly
+that: the same workload served at burst sizes {1, 4, 8, 16} (``burst=1`` is
+the per-token loop the seed shipped), for a dense model, a MoE model, an MLA
+latent-cache model, and the adaptive-controller machinery, plus one
+speculative run. Each record carries tokens/sec, the server's counted host
+round-trips, and a bit-identity flag against the burst=1 greedy output —
+bursts are a pure scheduling change, so any token drift is a bug.
+
+    PYTHONPATH=src python -m benchmarks.bench_serving --bursts 1,4,8,16
+
+``--smoke`` shrinks the workload for CI, writes
+``artifacts/bench/BENCH_serving.json``, and exits nonzero if burst=8 is
+slower than burst=1 (``--min-speedup``) or any config loses bit-identity —
+the CI gate that keeps the burst path honest.
+"""
+from __future__ import annotations
+
+import sys
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import EngineContext, FXP16, PrecisionPolicy
+from repro.serve.engine import BatchedServer, Request
+
+from ._common import (
+    base_record,
+    bench_parser,
+    emit_record,
+    load_model,
+    timed,
+)
+
+CONFIG_ARCHS = {
+    "dense": "olmo-1b",
+    "moe": "llama4-maverick-400b-a17b",
+    "mla": "deepseek-v3-671b",
+}
+
+
+def _workload(cfg, n, *, max_new, seed=1):
+    rng = np.random.default_rng(seed)
+    return [
+        Request(i, rng.integers(0, cfg.vocab_size, int(rng.integers(3, 9))).astype(np.int32),
+                max_new)
+        for i in range(n)
+    ]
+
+
+def _gen_tokens(out):
+    return sum(len(v) for v in out.values())
+
+
+def bench_bursts(make_server, cfg, bursts, *, requests, max_new, reps=3):
+    """Sweep burst sizes over one server config; burst=1 is the reference.
+
+    Reps are interleaved across burst sizes (A/B/A/B, best-of per burst) so
+    machine-load drift hits every burst size equally instead of biasing
+    whichever happened to run during a quiet stretch.
+    """
+    servers = {burst: make_server(burst) for burst in bursts}
+    run = lambda srv: srv.run(_workload(cfg, requests, max_new=max_new))
+    outs, best = {}, {b: float("inf") for b in bursts}
+    for burst, srv in servers.items():  # warmup: compile + first dispatch
+        outs[burst] = run(srv)
+    for _ in range(reps):
+        for burst, srv in servers.items():
+            dt, outs[burst] = timed(lambda: run(srv), warmup=0)
+            best[burst] = min(best[burst], dt)
+    ref = outs[bursts[0]]
+    rows = [{
+        "burst": burst,
+        "tok_s": round(_gen_tokens(outs[burst]) / max(best[burst], 1e-9), 1),
+        "host_transfers": servers[burst].host_transfers,
+        "bit_identical": outs[burst] == ref,
+    } for burst in bursts]
+    base = rows[0]["tok_s"]
+    for row in rows:
+        row["speedup"] = round(row["tok_s"] / max(base, 1e-9), 2)
+    return rows
+
+
+def main(argv=None):
+    ap = bench_parser(__doc__, default_out="BENCH_serving.json")
+    ap.add_argument("--bursts", default="1,4,8,16",
+                    help="comma-separated burst sizes (first is the reference)")
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--max-new", type=int, default=32)
+    ap.add_argument("--draft-len", type=int, default=3)
+    ap.add_argument("--d-model", type=int, default=128,
+                    help="reduced-model width (smoke shrinks it so the "
+                         "per-token loop's dispatch overhead is visible)")
+    ap.add_argument("--min-speedup", type=float, default=1.0,
+                    help="CI gate: burst=8 must reach this speedup over "
+                         "burst=1 (checked when 1 and 8 are both swept)")
+    args = ap.parse_args(argv)
+
+    if args.smoke:
+        args.full_size = False
+        args.slots = 2
+        args.requests = 8
+        args.max_new = 32
+        args.d_model = 64
+
+    bursts = [int(x) for x in args.bursts.split(",")]
+    max_len = 16 + args.max_new + args.draft_len
+    record = base_record(args, slots=args.slots, requests=args.requests,
+                         max_new=args.max_new, bursts=bursts, configs={})
+
+    for name, arch in CONFIG_ARCHS.items():
+        cfg, model, params = load_model(arch, full_size=args.full_size,
+                                        d_model=args.d_model)
+        ctx = EngineContext(mode="exact", compute_dtype=jnp.float32)
+        make = lambda burst: BatchedServer(model, ctx, params, slots=args.slots,
+                                           max_len=max_len, burst=burst)
+        record["configs"][name] = {
+            "arch": arch,
+            "sweep": bench_bursts(make, cfg, bursts, requests=args.requests,
+                                  max_new=args.max_new),
+        }
+
+    # adaptive machinery under bursts: pinned controller (bank tree per burst,
+    # telemetry live) so the output stays comparable across burst sizes —
+    # free-controller trajectories legitimately differ with observation
+    # cadence and are bench_adaptive's subject
+    from repro.runtime import ControllerConfig, ModeController, build_bank, default_points
+
+    cfg, model, params = load_model("olmo-1b", full_size=args.full_size,
+                                    d_model=args.d_model)
+    ctx = EngineContext(mode="carmen", policy=PrecisionPolicy.accurate(FXP16),
+                        compute_dtype=jnp.float32)
+    bank = build_bank(params, "carmen", default_points(FXP16, hifi_fmt=None),
+                      specs=model.specs())
+    make = lambda burst: BatchedServer(
+        model, ctx, params, slots=args.slots, max_len=max_len, burst=burst,
+        controller=ModeController(bank, ControllerConfig(pin="accurate")),
+    )
+    record["configs"]["adaptive"] = {
+        "arch": "olmo-1b", "pin": "accurate",
+        "sweep": bench_bursts(make, cfg, bursts, requests=args.requests,
+                              max_new=args.max_new),
+    }
+
+    # speculative serving (its round structure subsumes bursting; one run,
+    # identity vs the accurate-only burst=1 output)
+    from repro.spec import SpecConfig
+
+    ref_server = BatchedServer(model, ctx, bank.tree(bank.reference),
+                               slots=args.slots, max_len=max_len, burst=1,
+                               prepare_weights=False)
+    _, ref_out = timed(lambda: ref_server.run(
+        _workload(cfg, args.requests, max_new=args.max_new)))
+    spec_server = BatchedServer(model, ctx, params, slots=args.slots,
+                                max_len=max_len, bank=bank,
+                                speculate=SpecConfig(draft_len=args.draft_len))
+    dt, out = timed(lambda: spec_server.run(
+        _workload(cfg, args.requests, max_new=args.max_new)))
+    record["configs"]["speculative"] = {
+        "arch": "olmo-1b", "draft_len": args.draft_len,
+        "tok_s": round(_gen_tokens(out) / max(dt, 1e-9), 1),
+        "host_transfers": spec_server.host_transfers,
+        "bit_identical": out == ref_out,
+        "acceptance_rate": spec_server.spec_telemetry.summary()["acceptance_rate"],
+    }
+
+    emit_record(record, args.out)
+
+    # CI gate: bursts must never lose tokens/sec or bit-identity
+    failures = []
+    for name, rec in record["configs"].items():
+        if "sweep" not in rec:
+            if not rec["bit_identical"]:
+                failures.append(f"{name}: speculative output drifted")
+            continue
+        by_burst = {row["burst"]: row for row in rec["sweep"]}
+        for row in rec["sweep"]:
+            if not row["bit_identical"]:
+                failures.append(f"{name}: burst={row['burst']} output drifted")
+        if 1 in by_burst and 8 in by_burst:
+            speedup = by_burst[8]["tok_s"] / max(by_burst[1]["tok_s"], 1e-9)
+            if speedup < args.min_speedup:
+                failures.append(
+                    f"{name}: burst=8 speedup {speedup:.2f}x < {args.min_speedup}x"
+                )
+    if failures:
+        print("FAIL:", "; ".join(failures))
+        sys.exit(1)
+    return record
+
+
+if __name__ == "__main__":
+    main()

@@ -24,8 +24,6 @@ the quantities the draft/verify split trades in:
 """
 from __future__ import annotations
 
-import time
-
 import jax.numpy as jnp
 import numpy as np
 
@@ -40,6 +38,7 @@ from ._common import (
     emit_record,
     load_model,
     make_requests,
+    timed,
 )
 
 
@@ -51,11 +50,9 @@ def bench_accurate_only(model, cfg, bank, ctx, *, requests, slots,
     ref_server = BatchedServer(model, ctx, bank.tree(bank.reference),
                                slots=slots, max_len=max_len,
                                prepare_weights=False)
-    ref_reqs = make_requests(cfg, requests, prompt_len=prompt_len,
-                             max_new=max_new)
-    t0 = time.perf_counter()
-    ref_out = ref_server.run(ref_reqs)
-    return ref_out, time.perf_counter() - t0
+    ref_dt, ref_out = timed(lambda: ref_server.run(make_requests(
+        cfg, requests, prompt_len=prompt_len, max_new=max_new)))
+    return ref_out, ref_dt
 
 
 def bench_draft_len(model, cfg, params, bank, ctx, k, ref_out, ref_dt, *,
@@ -63,11 +60,8 @@ def bench_draft_len(model, cfg, params, bank, ctx, k, ref_out, ref_dt, *,
     spec_server = BatchedServer(model, ctx, params, slots=slots,
                                 max_len=max_len, bank=bank,
                                 speculate=SpecConfig(draft_len=k))
-    spec_reqs = make_requests(cfg, requests, prompt_len=prompt_len,
-                              max_new=max_new)
-    t0 = time.perf_counter()
-    spec_out = spec_server.run(spec_reqs)
-    spec_dt = time.perf_counter() - t0
+    spec_dt, spec_out = timed(lambda: spec_server.run(make_requests(
+        cfg, requests, prompt_len=prompt_len, max_new=max_new)))
     tele = spec_server.spec_telemetry.summary()
 
     agree = float(np.mean([

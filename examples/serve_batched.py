@@ -30,7 +30,7 @@ from repro.models import get_model
 from repro.serve.engine import BatchedServer, Request
 
 
-def compare_modes(cfg, model, params, requests):
+def compare_modes(cfg, model, params, requests, *, burst=8):
     results = {}
     for mode, ctx in (
         ("exact", EngineContext(mode="exact", compute_dtype=jnp.float32)),
@@ -39,13 +39,14 @@ def compare_modes(cfg, model, params, requests):
         ("int8", EngineContext(mode="int8", policy=PrecisionPolicy.accurate(FXP8),
                                compute_dtype=jnp.float32)),
     ):
-        server = BatchedServer(model, ctx, params, slots=3, max_len=32)
+        server = BatchedServer(model, ctx, params, slots=3, max_len=32, burst=burst)
         t0 = time.time()
         out = server.run([Request(r.rid, r.prompt, r.max_new) for r in requests])
         dt = time.time() - t0
         toks = sum(len(v) for v in out.values())
         results[mode] = out
-        print(f"{mode:13s}: {toks} tokens in {dt:5.1f}s ({toks/dt:6.1f} tok/s)")
+        print(f"{mode:13s}: {toks} tokens in {dt:5.1f}s ({toks/dt:6.1f} tok/s, "
+              f"{server.host_transfers} host round-trips)")
 
     base = results["exact"]
     for mode in ("carmen-fxp16", "int8"):
@@ -56,7 +57,7 @@ def compare_modes(cfg, model, params, requests):
 
 
 def adaptive_demo(cfg, model, params, *, slots=3, requests=12, max_new=16,
-                  cycle_budget=0.75):
+                  cycle_budget=0.75, burst=8):
     from repro.runtime import (
         ControllerConfig, ModeController, build_bank, default_points,
         teacher_forced_agreement,
@@ -83,7 +84,7 @@ def adaptive_demo(cfg, model, params, *, slots=3, requests=12, max_new=16,
 
     # all-accurate reference run, served from the bank's own accurate tree
     ref_server = BatchedServer(model, ctx, bank.tree("accurate"), slots=slots,
-                               max_len=32, prepare_weights=False)
+                               max_len=32, burst=burst, prepare_weights=False)
     ref_reqs = mixed_workload()
     t0 = time.time()
     ref_out = ref_server.run(ref_reqs)
@@ -93,7 +94,7 @@ def adaptive_demo(cfg, model, params, *, slots=3, requests=12, max_new=16,
     # adaptive run: multi-point bank + mode controller
     controller = ModeController(bank, ControllerConfig(cycle_budget=cycle_budget))
     adp_server = BatchedServer(model, ctx, params, slots=slots, max_len=32,
-                               controller=controller)
+                               burst=burst, controller=controller)
     t0 = time.time()
     adp_server.run(mixed_workload())
     adp_dt = time.time() - t0
@@ -132,6 +133,8 @@ def main(argv=None):
     ap.add_argument("--slots", type=int, default=3)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--cycle-budget", type=float, default=0.75)
+    ap.add_argument("--burst", type=int, default=8,
+                    help="decode burst length (1 = per-token loop)")
     args = ap.parse_args(argv)
 
     arch = args.arch or ("olmo-1b" if args.adaptive else "qwen3-8b")
@@ -142,14 +145,14 @@ def main(argv=None):
     if args.adaptive:
         adaptive_demo(cfg, model, params, slots=args.slots,
                       requests=args.requests, max_new=args.max_new,
-                      cycle_budget=args.cycle_budget)
+                      cycle_budget=args.cycle_budget, burst=args.burst)
     else:
         rng = np.random.default_rng(1)
         reqs = [
             Request(i, rng.integers(0, cfg.vocab_size, 6).astype(np.int32), 12)
             for i in range(6)
         ]
-        compare_modes(cfg, model, params, reqs)
+        compare_modes(cfg, model, params, reqs, burst=args.burst)
 
 
 if __name__ == "__main__":

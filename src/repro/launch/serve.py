@@ -14,7 +14,9 @@ serves self-speculatively (``repro.spec``): draft ``--draft-len`` tokens on
 the shallow execution point (``--draft-point``, default the bank's cheapest;
 with ``--adaptive`` the controller picks it per round), verify them in one
 accurate multi-token forward, roll the KV cache back past rejections —
-greedy output stays bit-identical to accurate-only serving.
+greedy output stays bit-identical to accurate-only serving. ``--burst``
+sets the decode burst length (jitted scan steps per host round-trip;
+``--burst 1`` is the per-token loop, for A/B benchmarking).
 """
 from __future__ import annotations
 
@@ -88,6 +90,9 @@ def main(argv=None):
     ap.add_argument("--draft-point", default=None,
                     help="--speculative: bank point to draft at (default: the "
                          "cheapest; with --adaptive the controller picks)")
+    ap.add_argument("--burst", type=int, default=8,
+                    help="decode burst length: jitted scan steps per host "
+                         "round-trip (1 = the per-token loop)")
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="per-request sampling temperature (0 = greedy)")
     ap.add_argument("--seed", type=int, default=None,
@@ -148,6 +153,7 @@ def main(argv=None):
         model, ctx, params, slots=args.slots,
         max_len=args.prompt_len + args.max_new
         + (args.draft_len if args.speculative else 0) + 2,
+        burst=args.burst,
         prepare_weights=not args.per_call,
         controller=controller,
         speculate=speculate,
@@ -170,6 +176,7 @@ def main(argv=None):
     serving = "speculative " if args.speculative else ""
     print(f"served {len(results)} requests, {total_tokens} tokens in {dt:.1f}s "
           f"({total_tokens/max(dt,1e-9):.1f} tok/s, mode={args.mode}, "
+          f"burst={args.burst}, {server.host_transfers} host round-trips, "
           f"{serving}{weights} weights)")
     if server.telemetry is not None:
         print("telemetry:", json.dumps(server.telemetry.summary()))

@@ -1,8 +1,9 @@
-"""The serving-loop mode controller: per-step execution-point selection.
+"""The serving-loop mode controller: per-observation execution-point selection.
 
-Each decode step the :class:`ModeController` reads :class:`StepSignals` —
-cheap telemetry the server already has in hand — and votes to demote (move
-to a cheaper execution point), promote (toward accurate), or hold:
+Once per observation — a classic decode step, a speculative round, or a whole
+decode burst — the :class:`ModeController` reads :class:`StepSignals` (cheap
+telemetry the server already has in hand) and votes to demote (move to a
+cheaper execution point), promote (toward accurate), or hold:
 
 * **cycle budget**: an EMA of the relative MAC-cycle cost of recent steps is
   steered toward ``cycle_budget`` (a fraction of the all-accurate cost, e.g.
@@ -14,9 +15,11 @@ to a cheaper execution point), promote (toward accurate), or hold:
   logit margin above ``margin_demote``, approximation is safe (argmax will
   not flip); a margin below ``margin_promote`` asks for accuracy back.
 
-Votes must repeat ``hysteresis`` consecutive steps before the controller
-moves one rung on the bank's cheap->accurate ladder, so transient signals do
-not thrash the jit cache. The accuracy floor is structural, not a vote: every
+Votes must repeat ``hysteresis`` consecutive observations before the
+controller moves one rung on the bank's cheap->accurate ladder, so transient
+signals do not thrash the jit cache; under burst serving the cadence is one
+vote per burst, which is exactly the coarse reconfiguration interval the
+engine wants (switching mid-burst would force a host sync). The accuracy floor is structural, not a vote: every
 reachable point pins critical layers accurate (``pin_critical``).
 """
 from __future__ import annotations
@@ -31,12 +34,21 @@ __all__ = ["ControllerConfig", "ModeController", "StepSignals"]
 
 @dataclasses.dataclass(frozen=True)
 class StepSignals:
-    """One decode step's telemetry, as seen by the controller."""
+    """One observation's telemetry, as seen by the controller.
+
+    With burst serving the server aggregates a whole decode burst into one
+    observation: ``min_margin`` is the minimum over every token the burst
+    emitted, and ``steps`` is the number of engine steps it covered (so the
+    cycle-budget EMA advances as if each step had been observed
+    individually — burst-granular adaptivity costs zero extra device syncs
+    and no budget-tracking fidelity).
+    """
 
     active: int = 0
     queue_depth: int = 0
     free_slots: int = 0
     min_margin: Optional[float] = None  # top-2 logit margin, least confident slot
+    steps: int = 1                      # engine steps this observation covers
 
 
 @dataclasses.dataclass(frozen=True)
@@ -91,9 +103,15 @@ class ModeController:
 
     # -- feedback -------------------------------------------------------------
     def observe(self, signals: StepSignals) -> str:
-        """Account for the step just executed and pick the next point."""
+        """Account for the step/burst just executed and pick the next point.
+
+        An observation covering ``signals.steps`` engine steps moves the
+        relative-cycle EMA exactly as far as that many single-step
+        observations at the same point would have.
+        """
         cfg = self.cfg
-        self._rel_ema = cfg.ema * self._rel_ema + (1.0 - cfg.ema) * self.bank.rel_cycles(
+        alpha = cfg.ema ** max(signals.steps, 1)
+        self._rel_ema = alpha * self._rel_ema + (1.0 - alpha) * self.bank.rel_cycles(
             self.point
         )
         if cfg.pin is not None:

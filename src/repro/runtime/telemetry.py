@@ -70,9 +70,14 @@ def teacher_forced_agreement(model, ctx, tree, requests, results, margins):
 class TelemetryRecorder:
     """Accumulates per-step serving telemetry for one adaptive run.
 
-    ``record_step`` is called once per decode step with the executed point
-    and the number of active slots (tokens produced); ``record_prefill``
-    charges prompt tokens without counting a decode step or a switch.
+    ``record_burst`` is called once per decode burst (the server's host
+    round-trip granularity) with the executed point, the tokens emitted over
+    the burst, and the number of scan steps it ran; ``record_step`` is the
+    ``steps=1`` special case (one observation per classic decode step or
+    speculative round). ``record_prefill`` charges prompt tokens without
+    counting an observation or a switch. ``steps`` counts observations — one
+    per burst/step/round, aligned with ``min_margins`` — and ``decode_steps``
+    counts engine steps.
     Savings are relative to running every token at the bank's reference
     (all-accurate) point.
     """
@@ -88,7 +93,8 @@ class TelemetryRecorder:
         return cls(dict(bank.cycles_per_token), bank.reference)
 
     def reset(self) -> None:
-        self.steps = 0
+        self.steps = 0  # observations: bursts, classic steps, spec rounds
+        self.decode_steps = 0
         self.switches = 0
         self.tokens_by_point: Dict[str, int] = {k: 0 for k in self.cycles_per_token}
         self.steps_by_point: Dict[str, int] = {k: 0 for k in self.cycles_per_token}
@@ -105,15 +111,23 @@ class TelemetryRecorder:
     def record_prefill(self, point: str, tokens: int) -> None:
         self._charge(point, tokens)
 
-    def record_step(self, point: str, active: int, min_margin: Optional[float] = None) -> None:
+    def record_burst(self, point: str, tokens: int, steps: int = 1,
+                     min_margin: Optional[float] = None) -> None:
+        """One decode burst: ``tokens`` emitted over ``steps`` engine steps,
+        all at ``point``; ``min_margin`` aggregates the burst (min over its
+        emitted tokens)."""
         self.steps += 1
+        self.decode_steps += steps
         self.steps_by_point[point] += 1
         if self._prev_point is not None and point != self._prev_point:
             self.switches += 1
         self._prev_point = point
-        self._charge(point, active)
+        self._charge(point, tokens)
         if min_margin is not None:
             self.min_margins.append(float(min_margin))
+
+    def record_step(self, point: str, active: int, min_margin: Optional[float] = None) -> None:
+        self.record_burst(point, tokens=active, steps=1, min_margin=min_margin)
 
     @property
     def tokens(self) -> int:
@@ -129,6 +143,7 @@ class TelemetryRecorder:
         tokens = max(self.tokens, 1)
         return {
             "steps": self.steps,
+            "decode_steps": self.decode_steps,
             "tokens": self.tokens,
             "switches": self.switches,
             "mode_occupancy": {

@@ -1,26 +1,42 @@
-"""Serving engine: prefill/decode step builders, sampling, batched scheduler.
+"""Serving engine: decode bursts, bucketed prefill, sampling, batched scheduler.
 
-The decode step is the unit the decode-shape cells lower (one new token against
-a seq_len-deep KV cache). The scheduler below implements simple continuous
-batching over a fixed slot count — admit/evict per step, per-slot positions —
-with three serving fast paths on top:
+The scheduler implements continuous batching over a fixed slot count —
+admit/evict at burst boundaries, per-slot positions — with four serving fast
+paths on top:
 
 * **prepared weight banks**: on construction the server runs
   ``prepare_params`` (quantize once), so carmen/int8/kernel decode performs
   zero weight-side rounding or scale computation per step;
-* **batched prefill**: an admitted prompt runs through the model in ONE
-  multi-token forward (``decode_step`` with S = prompt length), and the
-  resulting KV rows are scattered into the slot cache — replacing the seed's
-  token-by-token Python loop. Sampling happens on device inside the jitted
-  step (per-slot temperature + per-request PRNG streams), so only (B, 1)
-  token ids and a (B,) top-2 logit margin cross the host boundary per step;
+* **device-resident decode bursts**: the decode hot loop is ONE jitted
+  ``lax.scan`` over up to ``burst`` single-token steps. All per-slot state
+  (pending token, generated count, remaining budget, PRNG key, temperature)
+  lives on device in the burst carry; token ids and top-2 logit margins
+  accumulate into ``(slots, burst)`` on-device buffers, so exactly one host
+  round-trip happens per burst instead of per token. The KV cache and slot
+  state are donated (``donate_argnums``), so XLA updates them in place
+  rather than copying per call. ``burst=1`` is the classic per-token loop;
+  larger bursts are bit-identical for greedy requests and stream-identical
+  for sampled ones (per-request PRNG keys are folded by generated-token
+  index, never by schedule);
+* **bucketed prefill**: an admitted prompt is padded to a power-of-two
+  length bucket and run through the model in one jitted call that also
+  scatters the resulting KV rows into the slot cache and rewinds the write
+  index to the true prompt length (the padded tail's rows are invisible
+  behind the per-query-causal mask and reclaimed by decode) — prefill
+  compiles O(log max_len) programs instead of one per distinct prompt
+  length, and cache insertion is not an eager ``jax.tree.map`` anymore.
+  Recurrent-state families (ssm/hybrid/audio) prefill through a jitted
+  ``lax.scan`` over the padded prompt with masked state updates — same
+  bucketing, no per-token host round-trip;
 * **runtime-adaptive precision** (``repro.runtime``): pass a
-  :class:`~repro.runtime.controller.ModeController` and each decode step
+  :class:`~repro.runtime.controller.ModeController` and each decode burst
   executes at the controller's current execution point — a different
-  prepared tree from the multi-point weight bank, selected from live
-  telemetry (logit margins, queue pressure, cycle budget) with zero
-  weight-side work per switch. ``self.telemetry`` accumulates mode
-  occupancy, estimated MAC cycles saved, and switch counts;
+  prepared tree from the multi-point weight bank, selected from per-burst
+  aggregated telemetry (min top-2 margin over the burst, queue pressure,
+  cycle budget) with zero weight-side work per switch and zero extra device
+  syncs (the margins ride the burst's one transfer). ``self.telemetry``
+  accumulates burst-aware mode occupancy, estimated MAC cycles, and switch
+  counts;
 * **self-speculative decoding** (``repro.spec``): pass
   ``speculate=SpecConfig(...)`` (plus a bank, or a controller that carries
   one) and the decode loop becomes draft-k-then-verify rounds: a jitted scan
@@ -28,14 +44,13 @@ with three serving fast paths on top:
   region past each slot's committed index, then ONE accurate multi-token
   forward verifies all ``k+1`` positions, accepts a draft prefix
   (greedy exact-match / rejection sampling), and rolls the cache back to the
-  accepted length per slot. Greedy output is bit-identical to accurate-only
+  accepted length per slot. The round keeps the burst discipline: the cache
+  is donated through draft and verify, and the emit buffers come back in a
+  single host transfer. Greedy output is bit-identical to accurate-only
   serving; ``self.spec_telemetry`` records acceptance and weight-pass cycle
-  savings. With a controller attached it picks the draft point each round,
-  fed by the verify logits' margins.
+  savings.
 
-SSM/hybrid/audio families keep the sequential prefill path (their recurrent
-state is carried step-by-step); the distributed story (cache shardings) lives
-in sharding/partition.py.
+The distributed story (cache shardings) lives in sharding/partition.py.
 """
 from __future__ import annotations
 
@@ -49,8 +64,10 @@ import numpy as np
 from repro.core import EngineContext, prepare_params
 from repro.models import ModelApi
 
-# families whose decode caches are pure attention/MLA KV rows (scatterable);
-# recurrent-state families prefill sequentially
+from .kvcache import bucket_length, scatter_rows, with_cache_positions
+
+# families whose decode caches are pure attention/MLA KV rows (scatterable,
+# index-rewindable); recurrent-state families prefill via the masked scan
 _BATCHED_PREFILL_FAMILIES = ("dense", "vlm", "moe")
 
 
@@ -63,16 +80,6 @@ def make_decode_sample_step(model: ModelApi, ctx: EngineContext, *,
         return sample(logits, key, temperature=temperature), cache
 
     return decode_sample
-
-
-def make_cached_prefill_step(model: ModelApi, ctx: EngineContext):
-    """Whole-prompt prefill: tokens (B, P) -> (first sampled token (B, 1), cache)."""
-
-    def prefill_step(params, tokens, cache):
-        logits, cache = model.decode_step(params, tokens, cache, ctx)
-        return jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32), cache
-
-    return prefill_step
 
 
 def sample(logits, key, *, temperature: float = 0.0):
@@ -93,8 +100,8 @@ def _sample_slots(last, base_keys, counts, temps):
 
     ``base_keys`` (B, 2) per-request PRNG keys, ``counts`` (B,) per-request
     generated-token indices (folded in, so a request's stream is independent
-    of batch composition and scheduling), ``temps`` (B,) temperatures —
-    ``temp <= 0`` means greedy, bit-identical to plain argmax.
+    of batch composition, scheduling, AND burst size), ``temps`` (B,)
+    temperatures — ``temp <= 0`` means greedy, bit-identical to plain argmax.
     """
     greedy = jnp.argmax(last, axis=-1).astype(jnp.int32)
     keys = jax.vmap(jax.random.fold_in)(base_keys, counts)
@@ -110,30 +117,155 @@ def top2_margin(logits):
     return top2[..., 0] - top2[..., 1]
 
 
-def make_serve_decode_step(model: ModelApi, ctx: EngineContext):
-    """Decode + per-slot sampling + margin telemetry (the scheduler's step).
+# ---------------------------------------------------------------------------
+# Jitted hot paths: decode burst + bucketed prefill
+# ---------------------------------------------------------------------------
+#
+# Per-slot serving state, device-resident between jitted calls:
+#   tok   (slots, 1) int32   pending token (last generated)
+#   count (slots,)   int32   generated-token index (PRNG fold position)
+#   rem   (slots,)   int32   remaining token budget; 0 = slot inactive
+#   key   (slots, 2) uint32  per-request PRNG base key
+#   temp  (slots,)   float32 per-request temperature (<= 0: greedy)
 
-    Only (B, 1) token ids and (B,) float margins cross the host boundary.
+
+def _init_slot_state(slots: int):
+    return {
+        "tok": jnp.zeros((slots, 1), jnp.int32),
+        "count": jnp.zeros((slots,), jnp.int32),
+        "rem": jnp.zeros((slots,), jnp.int32),
+        # distinct placeholder keys per slot; every admission overwrites the
+        # slot's key inside the jitted prefill (the seed's identical
+        # PRNGKey(0) stack relied on that overwrite happening eagerly)
+        "key": jax.vmap(jax.random.PRNGKey)(jnp.arange(slots)),
+        "temp": jnp.zeros((slots,), jnp.float32),
+    }
+
+
+def _admit_state(state, slot, tok, base_key, temp, max_new):
+    """Write one admitted request's serving state into slot ``slot``."""
+    return {
+        "tok": state["tok"].at[slot].set(tok[0]),
+        "count": state["count"].at[slot].set(1),  # prefill emitted token 0
+        "rem": state["rem"].at[slot].set(max_new - 1),
+        "key": state["key"].at[slot].set(base_key),
+        "temp": state["temp"].at[slot].set(temp),
+    }
+
+
+def make_decode_burst(model: ModelApi, ctx: EngineContext, burst: int,
+                      sampled: bool = True):
+    """The decode hot loop: ``burst`` single-token steps as one lax.scan.
+
+    ``(tree, cache, state) -> (cache, state, tokens (B, burst), margins
+    (B, burst))``. Tokens/margins accumulate on device; the caller performs
+    ONE host transfer per burst and clips each slot's emitted run to its
+    remaining budget (``state['rem']`` on entry — slots keep computing after
+    their budget drains, their output is discarded and their rows are
+    re-scattered at the next admission).
+
+    ``sampled=False`` compiles the all-greedy variant: no threefry fold /
+    categorical per step (a real cost on small models), bit-identical to the
+    sampled variant at ``temp <= 0``. The server picks per burst from the
+    active requests' temperatures.
     """
 
-    def decode_serve(params, tokens, cache, base_keys, counts, temps):
-        logits, cache = model.decode_step(params, tokens, cache, ctx)
-        last = logits[:, -1, :].astype(jnp.float32)
-        return _sample_slots(last, base_keys, counts, temps), top2_margin(last), cache
+    def decode_burst(tree, cache, state):
+        keys, temps = state["key"], state["temp"]
 
-    return decode_serve
+        def step(carry, _):
+            tok, cache, count, rem = carry
+            logits, cache = model.decode_step(tree, tok, cache, ctx)
+            last = logits[:, -1, :].astype(jnp.float32)
+            if sampled:
+                nxt = _sample_slots(last, keys, count, temps)
+                margin = top2_margin(last)
+            else:
+                # one top_k yields the greedy token AND the margin (top_k and
+                # argmax share first-occurrence tie-breaking)
+                top2, idx = jax.lax.top_k(last, 2)
+                nxt = idx[:, :1].astype(jnp.int32)
+                margin = top2[..., 0] - top2[..., 1]
+            active = (rem > 0).astype(jnp.int32)
+            return (nxt, cache, count + active, rem - active), (
+                nxt[:, 0], margin,
+            )
+
+        (tok, cache, count, rem), (toks, margins) = jax.lax.scan(
+            step, (state["tok"], cache, state["count"], state["rem"]),
+            None, length=burst,
+        )
+        state = dict(state, tok=tok, count=count, rem=rem)
+        return cache, state, jnp.moveaxis(toks, 0, 1), jnp.moveaxis(margins, 0, 1)
+
+    return decode_burst
 
 
-def make_serve_prefill_step(model: ModelApi, ctx: EngineContext):
-    """Whole-prompt prefill with sampling: tokens (1, P) -> first token + margin."""
+def make_bucketed_prefill(model: ModelApi, ctx: EngineContext, max_len: int):
+    """Whole-prompt prefill for attention/MLA families, scatter included.
 
-    def prefill_serve(params, tokens, cache, base_keys, temps):
-        logits, cache = model.decode_step(params, tokens, cache, ctx)
-        last = logits[:, -1, :].astype(jnp.float32)
-        counts = jnp.zeros((tokens.shape[0],), jnp.int32)  # first generated token
-        return _sample_slots(last, base_keys, counts, temps), top2_margin(last), cache
+    ``(tree, cache, state, tokens (1, Pb), plen, slot, base_key, temp,
+    max_new) -> (tok (1, 1), margin (1,), cache, state)``. ``tokens`` is the
+    prompt padded to a power-of-two bucket ``Pb`` (suffix padding, so MoE
+    dispatch ranks of real tokens are untouched); the first sampled token
+    comes from the logits at ``plen - 1`` and the fresh row cache is written
+    into slot ``slot`` with its index rewound to ``plen`` — the padded
+    tail's KV rows are invisible garbage, overwritten by decode.
 
-    return prefill_serve
+    Compiles once per bucket shape: O(log max_len) programs total.
+    """
+
+    def prefill(tree, cache, state, tokens, plen, slot, base_key, temp, max_new):
+        row = model.make_cache(1, max_len, dtype=jnp.float32)
+        logits, row = model.decode_step(tree, tokens, row, ctx)
+        last = jax.lax.dynamic_slice_in_dim(logits, plen - 1, 1, axis=1)
+        last = last[:, 0, :].astype(jnp.float32)
+        row = with_cache_positions(row, plen[None])
+        return _finish_prefill(cache, state, row, last, slot, base_key, temp,
+                               max_new)
+
+    return prefill
+
+
+def make_scan_prefill(model: ModelApi, ctx: EngineContext, max_len: int):
+    """Prefill for recurrent-state families (ssm/hybrid/audio): one jitted
+    ``lax.scan`` over the padded prompt instead of a per-token host loop.
+
+    Steps past ``plen`` run but their state update is masked out
+    (``jnp.where`` select on every cache leaf), so buckets compose with
+    recurrent state too. Same signature and compile-count bound as
+    :func:`make_bucketed_prefill`.
+    """
+
+    def prefill(tree, cache, state, tokens, plen, slot, base_key, temp, max_new):
+        row0 = model.make_cache(1, max_len, dtype=jnp.float32)
+        last0 = jnp.zeros((1, model.cfg.vocab_size), jnp.float32)
+
+        def step(carry, xs):
+            row, last = carry
+            tok_i, i = xs
+            logits, new_row = model.decode_step(tree, tok_i[None, None], row, ctx)
+            valid = i < plen
+            row = jax.tree.map(lambda n, o: jnp.where(valid, n, o), new_row, row)
+            last = jnp.where(valid, logits[:, -1, :].astype(jnp.float32), last)
+            return (row, last), None
+
+        (row, last), _ = jax.lax.scan(
+            step, (row0, last0), (tokens[0], jnp.arange(tokens.shape[1]))
+        )
+        return _finish_prefill(cache, state, row, last, slot, base_key, temp,
+                               max_new)
+
+    return prefill
+
+
+def _finish_prefill(cache, state, row, last, slot, base_key, temp, max_new):
+    """Shared prefill tail: sample token 0, scatter the row, admit the slot."""
+    tok = _sample_slots(last, base_key[None, :], jnp.zeros((1,), jnp.int32),
+                        temp[None])
+    cache = scatter_rows(cache, row, slot)
+    state = _admit_state(state, slot, tok, base_key, temp, max_new)
+    return tok, top2_margin(last), cache, state
 
 
 @dataclasses.dataclass
@@ -161,15 +293,24 @@ def _checked_prompt(req: Request) -> np.ndarray:
 class BatchedServer:
     """Continuous batching over ``slots`` concurrent sequences.
 
+    ``burst`` is the decode granularity: one jitted scan of up to ``burst``
+    single-token steps per host round-trip, with admission/eviction at burst
+    boundaries. ``burst=1`` reproduces the per-token loop exactly; larger
+    bursts produce identical per-request streams (greedy is bit-identical,
+    sampled streams fold the PRNG by token index) while cutting Python
+    dispatch and host transfers by the burst factor. ``host_transfers``
+    counts device->host round-trips for the run.
+
     ``prepare_weights=True`` (default) formats the weight bank once through
     the engine's backend registry; pass False to benchmark the per-call path.
 
-    ``controller`` switches the server to runtime-adaptive precision: decode
-    executes at the controller's current execution point (a tree from its
-    multi-point weight bank), the controller observes margins / queue
-    pressure after every step, and ``self.telemetry`` accumulates occupancy,
-    switch counts, and estimated MAC-cycle savings. ``params`` may stay the
-    raw float tree in that case — the bank carries all serving weights.
+    ``controller`` switches the server to runtime-adaptive precision: each
+    burst executes at the controller's current execution point (a tree from
+    its multi-point weight bank), the controller observes the burst's
+    aggregated margins / queue pressure, and ``self.telemetry`` accumulates
+    occupancy, switch counts, and estimated MAC-cycle savings. ``params``
+    may stay the raw float tree in that case — the bank carries all serving
+    weights.
 
     ``speculate`` (a :class:`repro.spec.SpecConfig`) switches the decode loop
     to self-speculative rounds served from a multi-point ``bank`` (defaulting
@@ -188,12 +329,15 @@ class BatchedServer:
     params: object
     slots: int = 4
     max_len: int = 256
+    burst: int = 8
     prepare_weights: bool = True
     controller: Optional[object] = None  # repro.runtime.ModeController
     speculate: Optional[object] = None   # repro.spec.SpecConfig
     bank: Optional[object] = None        # repro.runtime.MultiPointBank
 
     def __post_init__(self):
+        if self.burst < 1:
+            raise ValueError(f"burst must be >= 1, got {self.burst}")
         self._bank = self.bank
         if self._bank is None and self.controller is not None:
             self._bank = self.controller.bank
@@ -228,15 +372,22 @@ class BatchedServer:
                 self.model, self.ctx, self._bank, self.speculate
             )
             self.spec_telemetry = self.spec.telemetry
-        self.decode = jax.jit(make_serve_decode_step(self.model, self.ctx))
-        self.prefill = jax.jit(make_serve_prefill_step(self.model, self.ctx))
+        # the two jitted hot paths: cache + slot state are donated so XLA
+        # writes them in place instead of copying the KV buffers per call.
+        # Burst variants (sampled / all-greedy) compile lazily on first use.
+        self._burst_fns = {}
+        prefill_factory = (
+            make_bucketed_prefill if self.batched_prefill else make_scan_prefill
+        )
+        self.prefill = jax.jit(
+            prefill_factory(self.model, self.ctx, self.max_len),
+            donate_argnums=(1, 2),
+        )
         self.cache = self.model.make_cache(self.slots, self.max_len, dtype=jnp.float32)
         self.active: Dict[int, Request] = {}
-        self._slot_keys = jnp.stack(
-            [jax.random.PRNGKey(0)] * self.slots
-        )  # (slots, 2) per-request PRNG streams
-        self._slot_temps = np.zeros((self.slots,), np.float32)
+        self._state = _init_slot_state(self.slots)
         self._slot_start = np.zeros((self.slots,), np.int32)  # committed KV rows
+        self.host_transfers = 0
 
     def _serving_tree(self):
         """The tree prefill / non-speculative decode executes at.
@@ -248,51 +399,32 @@ class BatchedServer:
             return self._bank.tree(self.spec.verify_point)
         return self.controller.tree() if self.controller is not None else self.params
 
-    def _scatter_slot(self, slot: int, row_cache):
-        """Write a freshly prefilled single-row cache into this slot's rows."""
-
-        def put(dst, src):
-            src = src.astype(dst.dtype)
-            if dst.shape == src.shape:  # slots == 1: whole-cache replacement
-                return src
-            diff = [i for i, (a, b) in enumerate(zip(dst.shape, src.shape)) if a != b]
-            assert len(diff) == 1, (dst.shape, src.shape)
-            return jax.lax.dynamic_update_slice_in_dim(dst, src, slot, diff[0])
-
-        self.cache = jax.tree.map(put, self.cache, row_cache)
-
     def _prefill_slot(self, slot: int, req: Request):
         """Run the prompt into this slot's cache; sets ``req.generated``.
 
-        Both paths prefill a FRESH single-row cache and scatter it into the
-        slot, so prefilling never touches other active slots' state: one
-        multi-token pass for attention families (compiles once per distinct
-        prompt length), a sequential token loop for recurrent state.
+        One jitted call: the prompt (padded to its length bucket) prefills a
+        FRESH single-row cache, the row is scattered into the slot, and the
+        slot's serving state is admitted — prefilling never touches other
+        active slots' state, and only the first token + margin cross back to
+        the host.
         """
         prompt = _checked_prompt(req)
         tree = self._serving_tree()
         seed = req.seed if req.seed is not None else req.rid
-        base_key = jax.random.PRNGKey(seed)
-        temp = np.float32(req.temperature)
-        row = self.model.make_cache(1, self.max_len, dtype=jnp.float32)
-        if self.batched_prefill:
-            tok, margin, row = self.prefill(
-                tree, jnp.asarray(prompt[None, :]), row,
-                base_key[None, :], jnp.asarray([temp]),
-            )
-        else:
-            zero = jnp.zeros((1,), jnp.int32)
-            for t in prompt:
-                tok, margin, row = self.decode(
-                    tree, jnp.asarray([[t]], jnp.int32), row,
-                    base_key[None, :], zero, jnp.asarray([temp]),
-                )
-        self._scatter_slot(slot, row)
-        self._slot_keys = self._slot_keys.at[slot].set(base_key)
-        self._slot_temps[slot] = temp
+        bucket = bucket_length(len(prompt), self.max_len)
+        padded = np.zeros((1, bucket), np.int32)
+        padded[0, : len(prompt)] = prompt
+        tok, margin, self.cache, self._state = self.prefill(
+            tree, self.cache, self._state, jnp.asarray(padded),
+            jnp.int32(len(prompt)), jnp.int32(slot),
+            jax.random.PRNGKey(seed), jnp.float32(req.temperature),
+            jnp.int32(req.max_new),
+        )
+        tok, margin = jax.device_get((tok, margin))
+        self.host_transfers += 1
         self._slot_start[slot] = len(prompt)
-        req.generated = [int(np.asarray(tok)[0, 0])]
-        req.margins = [float(np.asarray(margin)[0])]
+        req.generated = [int(tok[0, 0])]
+        req.margins = [float(margin[0])]
         if self.telemetry is not None:
             point = (self.spec.verify_point if self.spec is not None
                      else self.controller.point)
@@ -303,19 +435,22 @@ class BatchedServer:
 
         Per-token top-2 margins land on each request's ``.margins``; with a
         controller attached, ``self.telemetry`` holds the adaptive-run record.
-        ``run`` is reusable: telemetry, controller state, and speculative
-        counters start fresh on every invocation.
+        ``run`` is reusable: telemetry, controller state, speculative
+        counters, and the transfer count start fresh on every invocation.
         """
         for req in requests:  # reject before any state mutates
             prompt = _checked_prompt(req)
-            if self.spec is not None and (
-                len(prompt) + req.max_new + self.spec.draft_len > self.max_len
-            ):
+            scratch = self.spec.draft_len if self.spec is not None else 0
+            if len(prompt) + req.max_new + scratch > self.max_len:
+                extra = (f" + draft_len ({scratch})" if self.spec is not None
+                         else "")
+                why = (" — the verify forward needs draft_len rows of "
+                       "scratch headroom" if self.spec is not None else
+                       " — the KV cache would overflow mid-decode")
                 raise ValueError(
                     f"request {req.rid}: prompt ({len(prompt)}) + max_new "
-                    f"({req.max_new}) + draft_len ({self.spec.draft_len}) "
-                    f"exceeds max_len ({self.max_len}) — the verify forward "
-                    "needs draft_len rows of scratch headroom"
+                    f"({req.max_new}){extra} exceeds max_len "
+                    f"({self.max_len}){why}"
                 )
         if self.telemetry is not None:
             self.telemetry.reset()
@@ -323,6 +458,7 @@ class BatchedServer:
             self.controller.reset()
         if self.spec is not None:
             self.spec.reset()
+        self.host_transfers = 0
         queue = list(requests)
         results: Dict[int, List[int]] = {}
         slot_of: Dict[int, int] = {}
@@ -343,7 +479,7 @@ class BatchedServer:
             if self.spec is not None:
                 self._spec_round(slot_of, len(queue), len(free))
             else:
-                self._decode_round(slot_of, len(queue), len(free))
+                self._burst_round(slot_of, len(queue), len(free))
             done = [r for r, q in self.active.items() if len(q.generated) >= q.max_new]
             for rid in done:
                 req = self.active.pop(rid)
@@ -351,43 +487,52 @@ class BatchedServer:
                 free.append(slot_of.pop(rid))
         return results
 
-    def _batch_state(self, slot_of):
-        """Pending token + generated count per slot for the active set."""
-        toks = np.zeros((self.slots, 1), np.int32)
-        counts = np.zeros((self.slots,), np.int32)
-        for rid, req in self.active.items():
-            toks[slot_of[rid], 0] = req.generated[-1]
-            counts[slot_of[rid]] = len(req.generated)
-        return toks, counts
-
-    def _observe(self, point, tokens, queue_depth, free_slots, min_margin):
+    def _observe(self, point, tokens, steps, queue_depth, free_slots, min_margin):
         from repro.runtime import StepSignals
 
-        self.telemetry.record_step(point, active=tokens, min_margin=min_margin)
+        self.telemetry.record_burst(point, tokens=tokens, steps=steps,
+                                    min_margin=min_margin)
         self.controller.observe(StepSignals(
             active=len(self.active),
             queue_depth=queue_depth,
             free_slots=free_slots,
             min_margin=min_margin,
+            steps=steps,
         ))
 
-    def _decode_round(self, slot_of, queue_depth, free_slots):
-        """One classic single-token decode step over the active slots."""
-        toks, counts = self._batch_state(slot_of)
-        sampled, margins, self.cache = self.decode(
-            self._serving_tree(), jnp.asarray(toks), self.cache,
-            self._slot_keys, jnp.asarray(counts), jnp.asarray(self._slot_temps),
+    def decode_burst(self, sampled: bool = True):
+        """The jitted burst step (``sampled=False``: the all-greedy variant)."""
+        if sampled not in self._burst_fns:
+            self._burst_fns[sampled] = jax.jit(
+                make_decode_burst(self.model, self.ctx, self.burst,
+                                  sampled=sampled),
+                donate_argnums=(1, 2),
+            )
+        return self._burst_fns[sampled]
+
+    def _burst_round(self, slot_of, queue_depth, free_slots):
+        """One decode burst over the active slots: ``burst`` scan steps on
+        device, one host transfer, per-slot budget clipping on the host."""
+        point = self.controller.point if self.controller is not None else None
+        sampled = any(r.temperature > 0.0 for r in self.active.values())
+        self.cache, self._state, toks, margins = self.decode_burst(sampled)(
+            self._serving_tree(), self.cache, self._state,
         )
-        sampled = np.asarray(sampled)
-        margins = np.asarray(margins)
-        if self.controller is not None:
-            active_margins = [float(margins[slot_of[r]]) for r in self.active]
-            self._observe(self.controller.point, len(self.active),
-                          queue_depth, free_slots, min(active_margins))
+        toks, margins = jax.device_get((toks, margins))
+        self.host_transfers += 1
+        emitted = 0
+        burst_margins = []
         for rid, req in self.active.items():
-            req.generated.append(int(sampled[slot_of[rid], 0]))
-            req.margins.append(float(margins[slot_of[rid]]))
-            self._slot_start[slot_of[rid]] += 1
+            s = slot_of[rid]
+            n = min(self.burst, req.max_new - len(req.generated))
+            req.generated.extend(int(t) for t in toks[s, :n])
+            req.margins.extend(float(m) for m in margins[s, :n])
+            self._slot_start[s] += n
+            emitted += n
+            burst_margins.append(float(margins[s, :n].min()))
+        if self.controller is not None:
+            self._observe(point, emitted, self.burst, queue_depth, free_slots,
+                          min(burst_margins))
 
     def _spec_round(self, slot_of, queue_depth, free_slots):
         """One draft-k-then-verify round over the active slots.
@@ -395,15 +540,18 @@ class BatchedServer:
         Each active request gains between 1 (first draft rejected) and
         ``draft_len + 1`` (all accepted + bonus) tokens, clipped to its
         ``max_new``; the KV cache comes back rolled back to the committed
-        length per slot.
+        length per slot, and the device slot state (pending token, count) is
+        re-synced in one fused update.
         """
-        toks, counts = self._batch_state(slot_of)
+        st = self._state
         draft_point = self.controller.point if self.controller is not None else None
         emitted, accepted, margins, self.cache, point = self.spec.round(
-            jnp.asarray(toks), self.cache, self._slot_keys, counts,
-            self._slot_temps, self._slot_start, draft_point=draft_point,
+            st["tok"], self.cache, st["key"], st["count"], st["temp"],
+            self._slot_start, draft_point=draft_point,
         )
+        self.host_transfers += 1
         accs, emits, round_margins = [], [], []
+        sync_slots, sync_toks, sync_counts = [], [], []
         for rid, req in self.active.items():
             s = slot_of[rid]
             n = min(int(accepted[s]) + 1, req.max_new - len(req.generated))
@@ -413,7 +561,18 @@ class BatchedServer:
             accs.append(int(accepted[s]))
             emits.append(n)
             round_margins.append(float(margins[s, :n].min()))
+            sync_slots.append(s)
+            sync_toks.append(int(emitted[s, n - 1]))
+            sync_counts.append(len(req.generated))
+        sl = jnp.asarray(sync_slots, jnp.int32)
+        self._state = dict(
+            st,
+            tok=st["tok"].at[sl].set(jnp.asarray(sync_toks, jnp.int32)[:, None]),
+            count=st["count"].at[sl].set(jnp.asarray(sync_counts, jnp.int32)),
+        )
         self.spec.telemetry.record_round(point, self.spec.verify_point, accs, emits)
         if self.controller is not None:
-            self._observe(point, sum(emits), queue_depth, free_slots,
-                          min(round_margins))
+            # a round executes draft_len single-token steps + one multi-token
+            # verify forward: that is what the budget EMA / decode_steps cover
+            self._observe(point, sum(emits), self.spec.draft_len + 1,
+                          queue_depth, free_slots, min(round_margins))

@@ -1,0 +1,89 @@
+"""KV-cache index surgery shared by serving and speculative decoding.
+
+Attention/MLA decode caches are (rows, write index) pairs per layer; the
+per-query-causal mask (``key_pos <= query_pos``) makes every row at a position
+``>= index`` invisible, and the next decode write lands AT the index — so any
+rows past it are overwritten right before they could become visible. Two
+serving mechanisms lean on that scratch discipline:
+
+* **bucketed prefill** pads a prompt to a power-of-two block, runs one
+  multi-token decode, then rewinds the index to the true prompt length —
+  the padded tail's rows become invisible garbage, reclaimed by decode;
+* **speculative rollback** truncates the cache to the accepted prefix after
+  a verify round (``repro.spec.rollback`` re-exports these helpers).
+
+Recurrent-state families (ssm/hybrid/audio mixers) carry no positional index
+in their mixer state and cannot be rewound; callers gate on the family.
+
+Index leaves are identified exactly as ``transformer._cache_index`` does:
+integer dtype, stacked ``(layers, batch)`` shape; every attention layer
+advances in lockstep so one ``(B,)`` vector describes the whole cache.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["bucket_length", "cache_positions", "scatter_rows", "with_cache_positions"]
+
+
+def _is_index(leaf) -> bool:
+    return (
+        hasattr(leaf, "dtype")
+        and jnp.issubdtype(leaf.dtype, jnp.integer)
+        and getattr(leaf, "ndim", 0) >= 2
+    )
+
+
+def cache_positions(cache):
+    """Per-slot committed row counts, ``(B,)`` int32 (layer 0 is authoritative)."""
+    for leaf in jax.tree.leaves(cache):
+        if _is_index(leaf):
+            return leaf[0]
+    raise ValueError(
+        "cache carries no write index — recurrent-state caches cannot be "
+        "positioned/rolled back"
+    )
+
+
+def with_cache_positions(cache, positions):
+    """Rewrite every layer's write index to ``positions`` ((B,) int32)."""
+    positions = jnp.asarray(positions, jnp.int32)
+
+    def put(leaf):
+        if _is_index(leaf):
+            return jnp.broadcast_to(positions, leaf.shape).astype(leaf.dtype)
+        return leaf
+
+    return jax.tree.map(put, cache)
+
+
+def bucket_length(plen: int, max_len: int) -> int:
+    """Next power-of-two block length for a ``plen``-token prompt.
+
+    Prefill compiles one program per distinct block shape; rounding prompts up
+    to buckets caps that at O(log max_len) programs instead of one per
+    distinct prompt length. Clamped to ``max_len`` (the cache row budget).
+    """
+    b = 1
+    while b < plen:
+        b *= 2
+    return min(b, max_len)
+
+
+def scatter_rows(full, row, slot):
+    """Write a single-row cache into slot ``slot`` of a multi-slot cache.
+
+    Shape-driven (works on any cache pytree, traced or eager): the one axis
+    where the trees disagree is the slot axis. ``slot`` may be a traced int.
+    """
+
+    def put(dst, src):
+        src = src.astype(dst.dtype)
+        if dst.shape == src.shape:  # slots == 1: whole-cache replacement
+            return src
+        diff = [i for i, (a, b) in enumerate(zip(dst.shape, src.shape)) if a != b]
+        assert len(diff) == 1, (dst.shape, src.shape)
+        return jax.lax.dynamic_update_slice_in_dim(dst, src, slot, diff[0])
+
+    return jax.tree.map(put, full, row)

@@ -11,7 +11,6 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core import EngineContext
 from repro.models import ModelApi
@@ -45,8 +44,16 @@ class SpeculativeDecoder:
                 "point: every round would pay k full-cost draft passes on "
                 "top of the verify pass — pick a cheaper draft point"
             )
-        self.draft_loop = jax.jit(make_draft_loop(model, ctx, self.cfg.draft_len))
-        self.verify = jax.jit(make_verify_step(model, ctx, self.cfg.draft_len))
+        # the cache is donated through both halves of the round (draft writes
+        # scratch rows in place, verify overwrites them and rolls back), so a
+        # round never copies the KV buffers; emit/accept/margin buffers stay
+        # on device until the caller's single host transfer
+        self.draft_loop = jax.jit(
+            make_draft_loop(model, ctx, self.cfg.draft_len), donate_argnums=(2,)
+        )
+        self.verify = jax.jit(
+            make_verify_step(model, ctx, self.cfg.draft_len), donate_argnums=(4,)
+        )
         self.telemetry = SpecTelemetry.for_bank(bank, self.cfg.draft_len)
         self._round = 0
 
@@ -68,7 +75,9 @@ class SpeculativeDecoder:
         counts, ``counts`` (B,) generated-token indices (PRNG folds). Returns
         ``(emitted (B,k+1) np, accepted (B,) np, margins (B,k+1) np, cache)``
         with the cache rolled back to ``start + accepted + 1`` rows per slot.
-        The caller records telemetry (it knows which slots are active).
+        The three emit buffers come back in ONE host transfer; the cache stays
+        resident (and is donated through draft + verify — no copies). The
+        caller records telemetry (it knows which slots are active).
         """
         point = draft_point or self.default_draft_point
         round_idx = jnp.int32(self._round)
@@ -84,7 +93,5 @@ class SpeculativeDecoder:
             self.bank.tree(self.verify_point), tokens, draft_toks, draft_probs,
             cache, start, base_keys, counts, temps, round_idx,
         )
-        return (
-            np.asarray(emitted), np.asarray(accepted), np.asarray(margins),
-            cache, point,
-        )
+        emitted, accepted, margins = jax.device_get((emitted, accepted, margins))
+        return emitted, accepted, margins, cache, point

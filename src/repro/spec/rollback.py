@@ -1,52 +1,16 @@
 """KV-cache rollback: truncate drafted rows past the accepted prefix.
 
-Attention/MLA decode caches are (rows, write index) pairs per layer; the
-per-query-causal mask (``key_pos <= query_pos``) makes every row at a position
-``>= index`` invisible. Truncation is therefore a pure index rewrite: rows
-past the accepted prefix stay resident as garbage and are overwritten by the
-next draft/verify round. Recurrent-state families (ssm/hybrid/audio) carry no
-positional index and cannot roll back — ``BatchedServer`` rejects speculation
-for them.
-
-Index leaves are identified exactly as ``transformer._cache_index`` does:
-integer dtype, stacked ``(layers, batch)`` shape; every attention layer
-advances in lockstep so one ``(B,)`` vector describes the whole cache.
+Truncation is a pure index rewrite: the per-query-causal mask makes rows at
+positions ``>= index`` invisible, so rejected draft rows stay resident as
+garbage and are overwritten by the next draft/verify round. The index
+helpers live in :mod:`repro.serve.kvcache` (bucketed prefill shares the same
+scratch discipline); this module keeps the speculative-decoding vocabulary.
 """
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
+from repro.serve.kvcache import cache_positions, with_cache_positions
 
-
-def _is_index(leaf) -> bool:
-    return (
-        hasattr(leaf, "dtype")
-        and jnp.issubdtype(leaf.dtype, jnp.integer)
-        and getattr(leaf, "ndim", 0) >= 2
-    )
-
-
-def cache_positions(cache):
-    """Per-slot committed row counts, ``(B,)`` int32 (layer 0 is authoritative)."""
-    for leaf in jax.tree.leaves(cache):
-        if _is_index(leaf):
-            return leaf[0]
-    raise ValueError(
-        "cache carries no write index — recurrent-state caches cannot be "
-        "positioned/rolled back"
-    )
-
-
-def with_cache_positions(cache, positions):
-    """Rewrite every layer's write index to ``positions`` ((B,) int32)."""
-    positions = jnp.asarray(positions, jnp.int32)
-
-    def put(leaf):
-        if _is_index(leaf):
-            return jnp.broadcast_to(positions, leaf.shape).astype(leaf.dtype)
-        return leaf
-
-    return jax.tree.map(put, cache)
+__all__ = ["cache_positions", "rollback", "with_cache_positions"]
 
 
 def rollback(cache, committed):
