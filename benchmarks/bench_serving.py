@@ -16,9 +16,24 @@ bursts are a pure scheduling change, so any token drift is a bug.
 ``artifacts/bench/BENCH_serving.json``, and exits nonzero if burst=8 is
 slower than burst=1 (``--min-speedup``) or any config loses bit-identity —
 the CI gate that keeps the burst path honest.
+
+``--devices 1,2,4,8`` switches to the SHARDED sweep instead: one fresh
+subprocess per host device count (XLA locks the device count at first init,
+so it cannot vary in-process), each forcing
+``--xla_force_host_platform_device_count=N``, serving the same greedy
+workload on ``mesh=None`` and on ``make_host_mesh()`` (4x2 at N=8), and
+recording tok/s for both, bit-identity between them, and the collective
+bytes of the compiled decode burst (``launch.hlo_analysis``). The record
+lands in ``BENCH_sharded.json``; with ``--smoke`` the run exits nonzero if
+any row loses bit-identity or the 1-device mesh path falls below
+``--min-mesh-ratio`` of the ``mesh=None`` throughput (the "sharding must be
+free when it is a no-op" gate).
 """
 from __future__ import annotations
 
+import json
+import os
+import subprocess
 import sys
 
 import jax.numpy as jnp
@@ -84,6 +99,125 @@ def bench_bursts(make_server, cfg, bursts, *, requests, max_new, reps=3):
     return rows
 
 
+def _sharded_worker(args):
+    """One device-count probe (run in a fresh process with XLA_FLAGS set):
+    mesh=None vs make_host_mesh() on the same greedy workload."""
+    import jax
+
+    from repro.launch import hlo_analysis
+    from repro.launch.mesh import make_host_mesh
+
+    n = len(jax.devices())
+    mesh = make_host_mesh()
+    data_extent = dict(zip(mesh.axis_names, mesh.devices.shape))["data"]
+    # smallest multiple of the data extent >= requested slots, so the slot
+    # state and cache batch dim actually shard (recorded per row)
+    slots = -(-max(args.slots, 1) // data_extent) * data_extent
+    max_len = 16 + args.max_new + args.draft_len
+    cfg, model, params = load_model("olmo-1b", full_size=args.full_size,
+                                    d_model=args.d_model)
+    ctx = EngineContext(mode="exact", compute_dtype=jnp.float32)
+    work = lambda: _workload(cfg, args.requests, max_new=args.max_new)
+
+    none_srv = BatchedServer(model, ctx, params, slots=slots, max_len=max_len)
+    mesh_srv = BatchedServer(model, ctx, params, slots=slots, max_len=max_len,
+                             mesh=mesh)
+    # warmup (compile) once each, then interleave best-of-3 so load drift
+    # hits both paths equally — the mesh-ratio gate is a timing comparison
+    t_none, out_none = timed(lambda: none_srv.run(work()))
+    t_mesh, out_mesh = timed(lambda: mesh_srv.run(work()))
+    for _ in range(2):
+        t_none = min(t_none, timed(lambda: none_srv.run(work()), warmup=0)[0])
+        t_mesh = min(t_mesh, timed(lambda: mesh_srv.run(work()), warmup=0)[0])
+
+    # collective bytes of the compiled greedy decode burst on the mesh —
+    # lowered under the server's scope so the analyzed program is the one
+    # that executed (ambient mesh + the mesh-specific cache-write lowering)
+    with mesh_srv._scope():
+        hlo = (
+            mesh_srv.decode_burst(False)
+            .lower(mesh_srv._serving_tree(), mesh_srv.cache, mesh_srv._state)
+            .compile()
+            .as_text()
+        )
+    costs = hlo_analysis.analyze(hlo)
+    row = {
+        "devices": n,
+        "mesh": dict(zip(mesh.axis_names, (int(s) for s in mesh.devices.shape))),
+        "slots": slots,
+        "tok_s_none": round(_gen_tokens(out_none) / max(t_none, 1e-9), 1),
+        "tok_s_mesh": round(_gen_tokens(out_mesh) / max(t_mesh, 1e-9), 1),
+        "bit_identical": out_mesh == out_none,
+        "collective_bytes": costs.collective_bytes,
+        "collective_by_kind": costs.collective_by_kind,
+    }
+    row["mesh_ratio"] = round(row["tok_s_mesh"] / max(row["tok_s_none"], 1e-9), 2)
+    print("::SHARDED::" + json.dumps(row))
+
+
+def _sharded_sweep(args):
+    """Fan the device-count sweep out to fresh subprocesses (the forced host
+    device count is locked at first jax init) and gate on the results."""
+    devices = [int(x) for x in args.devices.split(",")]
+    passthrough = ["--_sharded-worker",
+                   "--slots", str(args.slots),
+                   "--requests", str(args.requests),
+                   "--max-new", str(args.max_new),
+                   "--d-model", str(args.d_model)]
+    if args.full_size:
+        passthrough.append("--full-size")
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    rows = []
+    for n in devices:
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={n} "
+            + env.get("XLA_FLAGS", "")
+        ).strip()
+        env.setdefault("JAX_PLATFORMS", "cpu")
+        env["PYTHONPATH"] = (
+            os.path.join(repo, "src") + os.pathsep + env.get("PYTHONPATH", "")
+        )
+        proc = subprocess.run(
+            [sys.executable, "-m", "benchmarks.bench_serving"] + passthrough,
+            env=env, capture_output=True, text=True, cwd=repo,
+        )
+        payload = [l for l in proc.stdout.splitlines()
+                   if l.startswith("::SHARDED::")]
+        if proc.returncode != 0 or not payload:
+            print(proc.stdout)
+            print(proc.stderr, file=sys.stderr)
+            raise SystemExit(f"sharded worker for {n} devices failed")
+        rows.append(json.loads(payload[0][len("::SHARDED::"):]))
+
+    one = next((r for r in rows if r["devices"] == 1), rows[0])
+    base = one["tok_s_mesh"]
+    for row in rows:
+        row["scaling_vs_1dev"] = round(row["tok_s_mesh"] / max(base, 1e-9), 2)
+    record = base_record(args, sweep="sharded", devices=devices, rows=rows)
+    out = args.out
+    if out and os.path.basename(out) == "BENCH_serving.json":
+        out = os.path.join(os.path.dirname(out), "BENCH_sharded.json")
+    emit_record(record, out)
+
+    failures = []
+    for row in rows:
+        if not row["bit_identical"]:
+            failures.append(f"{row['devices']} devices: mesh output drifted "
+                            "from mesh=None")
+    one = next((r for r in rows if r["devices"] == 1), None)
+    if one is not None and one["mesh_ratio"] < args.min_mesh_ratio:
+        failures.append(
+            f"1-device mesh path at {one['mesh_ratio']}x of mesh=None "
+            f"(< {args.min_mesh_ratio}x): sharding must be free when it is "
+            "a no-op"
+        )
+    if failures:
+        print("FAIL:", "; ".join(failures))
+        sys.exit(1)
+    return record
+
+
 def main(argv=None):
     ap = bench_parser(__doc__, default_out="BENCH_serving.json")
     ap.add_argument("--bursts", default="1,4,8,16",
@@ -98,6 +232,16 @@ def main(argv=None):
     ap.add_argument("--min-speedup", type=float, default=1.0,
                     help="CI gate: burst=8 must reach this speedup over "
                          "burst=1 (checked when 1 and 8 are both swept)")
+    ap.add_argument("--devices", default=None,
+                    help="comma-separated host device counts: run the "
+                         "SHARDED sweep (mesh=None vs make_host_mesh per "
+                         "count, fresh subprocess each) instead of the "
+                         "burst sweep; writes BENCH_sharded.json")
+    ap.add_argument("--min-mesh-ratio", type=float, default=0.85,
+                    help="sharded-sweep CI gate: the 1-device mesh path "
+                         "must reach this fraction of mesh=None tok/s")
+    ap.add_argument("--_sharded-worker", action="store_true",
+                    help="(internal) run one device-count probe in-process")
     args = ap.parse_args(argv)
 
     if args.smoke:
@@ -106,6 +250,11 @@ def main(argv=None):
         args.requests = 8
         args.max_new = 32
         args.d_model = 64
+
+    if getattr(args, "_sharded_worker"):
+        return _sharded_worker(args)
+    if args.devices:
+        return _sharded_sweep(args)
 
     bursts = [int(x) for x in args.bursts.split(",")]
     max_len = 16 + args.max_new + args.draft_len

@@ -105,6 +105,34 @@ class PreparedWeight:
                 )
         return PreparedWeight(data, scale, self.backend, self.meta)
 
+    def placement(self, data_sharding):
+        """Sharding container mirroring this leaf, for device_put / jit.
+
+        The payload takes ``data_sharding`` (the raw leaf's rule-derived
+        sharding — signed-digit grids and int8 qvalues keep the float
+        tensor's shape). The per-channel scale is keepdims-shaped: every axis
+        it shares with the payload (stacked-layer leading axes, the output
+        channel axis) inherits that axis's entry, size-1 keepdims axes
+        replicate — so the scale slices alongside the qvalues inside
+        ``lax.scan`` and broadcasts against a model-sharded output channel
+        without a gather. Returns a :class:`PreparedWeight` of shardings with
+        identical aux data, so it is treedef-compatible with this leaf.
+        """
+        from jax.sharding import NamedSharding, PartitionSpec
+
+        scale_sh = None
+        if self.scale is not None:
+            entries = tuple(data_sharding.spec)
+            entries = entries + (None,) * (self.data.ndim - len(entries))
+            spec = [
+                entries[i] if self.scale.shape[i] == self.data.shape[i] else None
+                for i in range(self.scale.ndim)
+            ]
+            while spec and spec[-1] is None:
+                spec.pop()
+            scale_sh = NamedSharding(data_sharding.mesh, PartitionSpec(*spec))
+        return PreparedWeight(data_sharding, scale_sh, self.backend, self.meta)
+
     @property
     def T(self):
         if self.scale is not None:

@@ -52,25 +52,6 @@ def engine_ctx(mode: str, attn: str = "xla", tp_bf16: bool = False) -> EngineCon
                          tp_reduce_bf16=tp_bf16)
 
 
-def _prepared_shardings(param_sh, prepared, mesh):
-    """Shardings for a prepared param tree: payloads inherit the raw leaf's
-    sharding, per-channel scales replicate (tiny), the synthesized tied
-    lm_head replicates (it is vocab-major; a dedicated rule can come later)."""
-    from repro.core import PreparedWeight
-
-    repl = NamedSharding(mesh, P())
-    if isinstance(prepared, dict) and "lm_head" in prepared and "lm_head" not in param_sh:
-        param_sh = dict(param_sh, lm_head=repl)
-
-    def one(sh, leaf):
-        if isinstance(leaf, PreparedWeight):
-            scale_sh = None if leaf.scale is None else repl
-            return PreparedWeight(sh, scale_sh, leaf.backend, leaf.meta)
-        return sh
-
-    return jax.tree.map(one, param_sh, prepared)
-
-
 def _batch_sharding(mesh, shape_tuple):
     """Shard dim 0 over (pod, data) when divisible; replicate otherwise."""
     axes = tuple(a for a in partition.BATCH_AXES if a in mesh.axis_names)
@@ -108,7 +89,11 @@ def build_cell(arch: str, shape_name: str, mesh, mode: str = "exact", attn: str 
         aprep = jax.eval_shape(
             lambda p: prepare_params(p, ctx.policy, mode, specs=specs), aparams
         )
-        param_sh = _prepared_shardings(param_sh, aprep, mesh)
+        # shared serving placement rules (sharding/partition.py): payloads
+        # inherit the raw leaf's sharding, per-channel scales ride the axes
+        # they share with the payload, tied lm_head uses the transposed
+        # embedding rule
+        param_sh = partition.prepared_shardings(aprep, specs, mesh)
         aparams = aprep
     batch = input_specs(cfg, shape)
     batch_sh = {k: _batch_sharding(mesh, v.shape) for k, v in batch.items()}
@@ -136,7 +121,7 @@ def build_cell(arch: str, shape_name: str, mesh, mode: str = "exact", attn: str 
 
     # decode: one token against a seq_len cache
     cache = model.make_cache(shape.global_batch, shape.seq_len, jnp.bfloat16, abstract=True)
-    cache_sh = partition.cache_shardings(cache, mesh, cfg)
+    cache_sh = partition.cache_shardings(cache, mesh, cfg, row_axis_len=shape.seq_len)
 
     def decode(params, tokens, cache):
         return model.decode_step(params, tokens, cache, ctx)

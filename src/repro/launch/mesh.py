@@ -5,6 +5,8 @@ jax device state (the dry-run must set XLA_FLAGS before first jax init).
 """
 from __future__ import annotations
 
+from typing import Optional
+
 import jax
 
 
@@ -14,7 +16,22 @@ def make_production_mesh(*, multi_pod: bool = False):
     return jax.make_mesh(shape, axes)
 
 
-def make_host_mesh():
-    """Whatever devices exist locally (tests / examples): 1 device -> 1x1 mesh."""
+def make_host_mesh(*, model: Optional[int] = None):
+    """(data, model) mesh over whatever devices exist locally.
+
+    ``model=`` fixes the tensor-parallel extent (it must divide the local
+    device count). By default the device count is factored into the most
+    square (data, model) split with ``model <= data`` — 1 device -> 1x1,
+    4 -> 2x2, 8 -> 4x2 — so local multi-device runs (e.g.
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8``) exercise tensor
+    parallelism, not just data parallelism. ``model=1`` recovers the old
+    pure-DP (n, 1) shape.
+    """
     n = len(jax.devices())
-    return jax.make_mesh((n, 1), ("data", "model"))
+    if model is None:
+        model = max(d for d in range(1, n + 1) if n % d == 0 and d * d <= n)
+    if model < 1 or n % model:
+        raise ValueError(
+            f"model={model} does not divide the {n} local devices"
+        )
+    return jax.make_mesh((n // model, model), ("data", "model"))

@@ -16,7 +16,10 @@ with ``--adaptive`` the controller picks it per round), verify them in one
 accurate multi-token forward, roll the KV cache back past rejections —
 greedy output stays bit-identical to accurate-only serving. ``--burst``
 sets the decode burst length (jitted scan steps per host round-trip;
-``--burst 1`` is the per-token loop, for A/B benchmarking).
+``--burst 1`` is the per-token loop, for A/B benchmarking). ``--mesh
+DATA,MODEL`` (or ``--mesh auto``) serves tensor-parallel on a device mesh —
+greedy token streams are bit-identical to single-device serving across mesh
+shapes.
 """
 from __future__ import annotations
 
@@ -97,7 +100,24 @@ def main(argv=None):
                     help="per-request sampling temperature (0 = greedy)")
     ap.add_argument("--seed", type=int, default=None,
                     help="base sampling seed (request i uses seed + i)")
+    ap.add_argument("--mesh", default=None, metavar="DATA,MODEL",
+                    help="serve tensor-parallel on a (data, model) device "
+                         "mesh: 'DATA,MODEL' extents (e.g. --mesh 4,2) or "
+                         "'auto' to factor the local device count (see "
+                         "XLA_FLAGS=--xla_force_host_platform_device_count)")
     args = ap.parse_args(argv)
+
+    mesh = None
+    if args.mesh:
+        from repro.launch.mesh import make_host_mesh
+
+        if args.mesh == "auto":
+            mesh = make_host_mesh()
+        else:
+            data, model_ext = (int(x) for x in args.mesh.split(","))
+            mesh = jax.make_mesh((data, model_ext), ("data", "model"))
+        print(f"mesh: {dict(zip(mesh.axis_names, mesh.devices.shape))} "
+              f"over {mesh.devices.size} devices")
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -131,7 +151,7 @@ def main(argv=None):
         bank = build_bank(
             params, args.mode,
             default_points(fmt, base_policy=policy, hifi_fmt=hifi),
-            specs=model.specs(),
+            specs=model.specs(), mesh=mesh,
         )
         print(f"bank: points={bank.names} shared_leaves={bank.shared_leaves}/"
               f"{bank.unique_leaves} rel_cycles="
@@ -158,7 +178,12 @@ def main(argv=None):
         controller=controller,
         speculate=speculate,
         bank=bank,
+        mesh=mesh,
     )
+    if server.shardings is not None:
+        from repro.sharding.partition import serving_sharding_report
+
+        print("sharding:", json.dumps(serving_sharding_report(server.shardings)))
     rng = np.random.default_rng(0)
     reqs = [
         Request(

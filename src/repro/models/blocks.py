@@ -194,6 +194,36 @@ def _sdpa_flash_xla(q, k, v, q_positions, k_positions, causal: bool,
     return jnp.moveaxis(outs, 0, 1).reshape(b, sq, h, hd_v)
 
 
+def cache_row_write(c, x, i):
+    """Write block ``x`` (B, S, ...) into rows [i, i+S) of cache ``c``
+    (B, Smax, ...), ``i`` (B,) int32 — the decode/prefill KV write.
+
+    Two lowerings with identical values:
+
+    * single device: a vmapped ``dynamic_update_slice`` — O(S) rows touched,
+      in-place on the donated cache buffer;
+    * under a mesh: a gather + select over the row axis. The vmapped DUS
+      lowers to a scatter that XLA's SPMD partitioner cannot lower inside
+      the nested burst/layer scans whenever an MoE dispatch shares the
+      program (hlo_verifier RET_CHECK on the scatter index broadcast,
+      jax 0.4.37) — the gather form is partitioner-friendly on every family.
+      Start indices are clamped exactly like DUS clamps them.
+    """
+    from repro.sharding.partition import current_mesh_axes
+
+    s = x.shape[1]
+    if not current_mesh_axes():
+        start = (lambda b_i: (b_i,) + (0,) * (x.ndim - 2))
+        upd = jax.vmap(lambda cb, xb, ib: jax.lax.dynamic_update_slice(cb, xb, start(ib)))
+        return upd(c, x.astype(c.dtype), i)
+    i = jnp.clip(i, 0, c.shape[1] - s)  # DUS start-clamping semantics
+    j = jnp.arange(c.shape[1], dtype=jnp.int32)[None, :] - i[:, None]  # (B, Smax)
+    valid = (j >= 0) & (j < s)
+    idx = jnp.clip(j, 0, s - 1).reshape(j.shape + (1,) * (x.ndim - 2))
+    gathered = jnp.take_along_axis(x.astype(c.dtype), idx, axis=1)
+    return jnp.where(valid.reshape(idx.shape), gathered, c)
+
+
 def attention(p, x, cfg: ModelConfig, ctx: EngineContext, *, positions, name, cache=None,
               causal: bool = True):
     """Returns (out, new_cache). cache = dict(k, v, index) for decode."""
@@ -229,9 +259,8 @@ def attention(p, x, cfg: ModelConfig, ctx: EngineContext, *, positions, name, ca
         new_cache = None
     else:
         idx = cache["index"]  # (B,) int32: per-row next write slot
-        upd = jax.vmap(lambda c, x, i: jax.lax.dynamic_update_slice(c, x, (i, 0, 0)))
-        ck = upd(cache["k"], k.astype(cache["k"].dtype), idx)
-        cv = upd(cache["v"], v.astype(cache["v"].dtype), idx)
+        ck = cache_row_write(cache["k"], k, idx)
+        cv = cache_row_write(cache["v"], v, idx)
         s_max = ck.shape[1]
         k_pos = jnp.arange(s_max)
         # per-query causal validity: query at position p sees keys <= p. With
@@ -345,6 +374,21 @@ def _dispatch_indices(expert_idx, num_experts: int, capacity: int):
     return gather_idx, valid, rank.reshape(s, k)
 
 
+def _get_shard_map():
+    """(shard_map, relax-kwargs, physical mesh) across jax versions."""
+    try:
+        from jax import shard_map as sm
+
+        relax = {"check_vma": False}
+    except ImportError:  # pragma: no cover — older jax
+        from jax.experimental.shard_map import shard_map as sm
+
+        relax = {"check_rep": False}
+    from jax._src import mesh as mesh_lib
+
+    return sm, relax, mesh_lib.thread_resources.env.physical_mesh
+
+
 def _combine_scatter(yw, token_of_choice, s: int, d: int):
     """Combine expert-slot outputs into per-token sums.
 
@@ -373,17 +417,7 @@ def _combine_scatter(yw, token_of_choice, s: int, d: int):
     if "model" in axes and e % max(sizes.get("model", 1), 1) == 0:
         from jax.sharding import PartitionSpec as _P
 
-        try:
-            from jax import shard_map as _shard_map
-
-            _relax = {"check_vma": False}
-        except ImportError:  # pragma: no cover — older jax
-            from jax.experimental.shard_map import shard_map as _shard_map
-
-            _relax = {"check_rep": False}
-        from jax._src import mesh as _mesh_lib
-
-        phys = _mesh_lib.thread_resources.env.physical_mesh
+        _shard_map, _relax, phys = _get_shard_map()
         batch_axes = tuple(a for a in BATCH_AXES if a in axes)
         import numpy as _np
 
@@ -437,7 +471,23 @@ def moe_ffn(p, x, cfg: ModelConfig, ctx: EngineContext, *, name,
     top_p, top_i = jax.lax.top_k(probs, k)  # (B, S, K)
     top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
 
-    plan = jax.vmap(lambda ti: _dispatch_indices(ti, e, capacity))(top_i)
+    plan_fn = jax.vmap(lambda ti: _dispatch_indices(ti, e, capacity))
+    from repro.sharding.partition import current_mesh_axes
+
+    if current_mesh_axes():
+        # manual-mode island: the plan is a sort/scan/gather chain over a few
+        # hundred int32s, and XLA's SPMD partitioner SILENTLY miscomputes it
+        # when the downstream dispatch constraint propagates a sharding onto
+        # it (observed: gather_idx off by whole tokens on a 2x2 mesh, jax
+        # 0.4.37). Replicated in/out shard_map makes every device compute
+        # the full plan with the unpartitioned lowering — bit-identical to
+        # single-device by construction, and O(S*K) int work is free.
+        from jax.sharding import PartitionSpec as _P
+
+        sm, relax, phys = _get_shard_map()
+        plan = sm(plan_fn, mesh=phys, in_specs=_P(), out_specs=_P(), **relax)(top_i)
+    else:
+        plan = plan_fn(top_i)
     gather_idx, valid, rank = plan  # (B,E,C), (B,E,C), (B,S,K)
 
     token_of_choice = gather_idx // k  # (B, E, C) -> source token position
@@ -480,9 +530,16 @@ def moe_ffn(p, x, cfg: ModelConfig, ctx: EngineContext, *, name,
 
     # aux: load-balance loss. Scatter-counts instead of a one_hot (B,S,E)
     # materialization — the one_hot form all-gathered 62 GB/dev of f32 router
-    # probs per pass (§Perf B iteration 4).
-    me = jnp.mean(probs, axis=(0, 1))  # (E,)
-    counts = jnp.zeros((e,), jnp.float32).at[top_i.reshape(-1)].add(1.0)
-    ce = counts / (b * s * k)
-    aux = {"lb_loss": e * jnp.sum(me * ce)}
+    # probs per pass (§Perf B iteration 4). Cached decode (dropless=True)
+    # skips it entirely: the loss is a training quantity the serving loop
+    # discards, and its flat scatter-add is the same scatter class the SPMD
+    # partitioner mis-lowers inside nested decode scans (see
+    # ``cache_row_write``) — no reason to carry it through the burst.
+    if dropless:
+        aux = {"lb_loss": jnp.zeros((), jnp.float32)}
+    else:
+        me = jnp.mean(probs, axis=(0, 1))  # (E,)
+        counts = jnp.zeros((e,), jnp.float32).at[top_i.reshape(-1)].add(1.0)
+        ce = counts / (b * s * k)
+        aux = {"lb_loss": e * jnp.sum(me * ce)}
     return out, aux

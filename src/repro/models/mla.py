@@ -17,7 +17,7 @@ from repro.configs.base import ModelConfig
 from repro.core import EngineContext
 from repro.core.normalization import rmsnorm
 
-from .blocks import Q_CHUNK, rope
+from .blocks import Q_CHUNK, cache_row_write, rope
 from .params import ParamSpec
 
 
@@ -71,9 +71,8 @@ def mla_attention(p, x, cfg: ModelConfig, ctx: EngineContext, *, positions, name
 
     if cache is not None:
         idx = cache["index"]  # (B,)
-        upd = jax.vmap(lambda c, x, i: jax.lax.dynamic_update_slice(c, x, (i, 0)))
-        c_kv = upd(cache["c_kv"], c_kv.astype(cache["c_kv"].dtype), idx)
-        k_rope = upd(cache["k_rope"], k_rope.astype(cache["k_rope"].dtype), idx)
+        c_kv = cache_row_write(cache["c_kv"], c_kv, idx)
+        k_rope = cache_row_write(cache["k_rope"], k_rope, idx)
         new_cache = {"c_kv": c_kv, "k_rope": k_rope, "index": idx + s}
         t = c_kv.shape[1]
         k_positions = jnp.arange(t)

@@ -23,7 +23,8 @@ from repro.core.precision_policy import PrecisionPolicy, pin_critical
 
 from .telemetry import estimate_point_cycles
 
-__all__ = ["ExecutionPoint", "MultiPointBank", "build_bank", "default_points"]
+__all__ = ["ExecutionPoint", "MultiPointBank", "build_bank", "default_points",
+           "place_bank"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -104,6 +105,37 @@ def _leaf_ids(tree) -> set:
     }
 
 
+def place_bank(bank: MultiPointBank, mesh, specs=None) -> MultiPointBank:
+    """Place every bank tree on ``mesh`` with the logical-axis shardings.
+
+    Leaves are placed ONCE per tensor identity and re-aliased into every
+    point's tree — pinned/agreeing layers stay single-copy on device, the
+    same zero-copy guarantee ``build_bank``'s shared memo gives on the host.
+    Mutates ``bank.trees`` in place (controllers and speculative decoders
+    hold references to the bank), returns the bank. Idempotent: re-placing an
+    already-placed bank is a no-op device_put.
+    """
+    from repro.sharding.partition import prepared_shardings
+
+    if specs is None:
+        raise ValueError("place_bank needs the model's param specs "
+                         "(model.specs()) to derive shardings")
+    is_pw = lambda x: isinstance(x, PreparedWeight)
+    placed: Dict[int, Any] = {}
+    for name in bank.names:
+        tree = bank.trees[name]
+        sh = prepared_shardings(tree, specs, mesh)
+
+        def put(leaf, sharding):
+            key = id(leaf)
+            if key not in placed:
+                placed[key] = jax.device_put(leaf, sharding)
+            return placed[key]
+
+        bank.trees[name] = jax.tree.map(put, tree, sh, is_leaf=is_pw)
+    return bank
+
+
 def build_bank(
     params,
     mode: str,
@@ -111,6 +143,7 @@ def build_bank(
     *,
     specs=None,
     reference: Optional[str] = None,
+    mesh=None,
 ) -> MultiPointBank:
     """Materialize the multi-point weight bank (one prepare pass, shared memo).
 
@@ -118,6 +151,11 @@ def build_bank(
     so the controller's demote/promote directions are well-defined. The
     ``reference`` point (default: ``"accurate"`` when present, else the most
     expensive point) anchors relative-cycle and savings reporting.
+
+    ``mesh`` places every prepared tree with the logical-axis shardings
+    (:func:`place_bank`) — sharded serving hands the jitted decode step
+    device-resident tensor-parallel trees, still zero weight-side work per
+    switch.
     """
     if mode == "exact":
         raise ValueError(
@@ -148,7 +186,7 @@ def build_bank(
     id_sets = [_leaf_ids(t) for t in trees.values()]
     all_ids = set().union(*id_sets)
     shared = {i for i in all_ids if sum(i in s for s in id_sets) >= 2}
-    return MultiPointBank(
+    bank = MultiPointBank(
         mode=mode,
         points=points,
         trees=trees,
@@ -157,3 +195,6 @@ def build_bank(
         shared_leaves=len(shared),
         unique_leaves=len(all_ids),
     )
+    if mesh is not None:
+        place_bank(bank, mesh, specs)
+    return bank

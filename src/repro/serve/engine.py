@@ -50,10 +50,22 @@ paths on top:
   serving; ``self.spec_telemetry`` records acceptance and weight-pass cycle
   savings.
 
-The distributed story (cache shardings) lives in sharding/partition.py.
+* **sharded serving** (``BatchedServer(mesh=...)``): the same hot paths run
+  tensor-parallel on a device mesh with no code fork. Every prepared weight
+  leaf (including whole multi-point banks, alias-preserving) is placed with
+  the logical-axis rules from ``sharding/partition.py``, the KV cache shards
+  slots across the ``data`` axis and heads/latent across ``model`` (the S
+  row axis is never split — decode's write index stays shard-local), the
+  per-slot decode state shards slots across ``data``, and the burst/prefill
+  jits carry explicit in/out shardings so the donated carry round-trips at a
+  fixed placement. ``mesh=None`` (the default) skips every placement call —
+  that path is byte-identical to single-device serving, and greedy token
+  streams are bit-identical across mesh shapes
+  (``tests/test_sharded_serving.py``).
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 from typing import Dict, List, Optional
 
@@ -63,6 +75,7 @@ import numpy as np
 
 from repro.core import EngineContext, prepare_params
 from repro.models import ModelApi
+from repro.sharding import partition
 
 from .kvcache import bucket_length, scatter_rows, with_cache_positions
 
@@ -322,6 +335,15 @@ class BatchedServer:
     per round; ``self.telemetry``'s cycle fields then describe draft-point
     occupancy only, and ``self.spec_telemetry`` is the cycle-accounting
     authority.
+
+    ``mesh`` serves tensor-parallel on a device mesh (axes from
+    ``data``/``model``/``pod``): weights, KV cache, and slot state are placed
+    once at construction with the logical-axis sharding rules and the jitted
+    hot paths carry explicit in/out shardings. ``mesh=None`` keeps the
+    single-device path byte-identical (no placement calls at all);
+    ``self.shardings`` holds the :class:`~repro.sharding.partition.\
+ServingShardings` bundle (``partition.serving_sharding_report`` summarizes
+    it) when a mesh is attached.
     """
 
     model: ModelApi
@@ -334,6 +356,7 @@ class BatchedServer:
     controller: Optional[object] = None  # repro.runtime.ModeController
     speculate: Optional[object] = None   # repro.spec.SpecConfig
     bank: Optional[object] = None        # repro.runtime.MultiPointBank
+    mesh: Optional[object] = None        # jax.sharding.Mesh
 
     def __post_init__(self):
         if self.burst < 1:
@@ -355,8 +378,6 @@ class BatchedServer:
         self.spec = None
         self.spec_telemetry = None
         if self.speculate is not None:
-            from repro.spec import SpeculativeDecoder
-
             if self._bank is None:
                 raise ValueError(
                     "speculate= needs a multi-point weight bank: pass bank= "
@@ -368,8 +389,38 @@ class BatchedServer:
                     f"{self.model.cfg.family!r} family carries recurrent "
                     "state that cannot roll back past rejected drafts"
                 )
+        self.cache = self.model.make_cache(self.slots, self.max_len, dtype=jnp.float32)
+        self.active: Dict[int, Request] = {}
+        self._state = _init_slot_state(self.slots)
+        self._slot_start = np.zeros((self.slots,), np.int32)  # committed KV rows
+        self.host_transfers = 0
+        # mesh serving: derive every placement once from the logical-axis
+        # rules and commit weights / cache / slot state to the mesh. With
+        # mesh=None nothing below runs — that path stays byte-identical.
+        self.shardings = None
+        if self.mesh is not None:
+            specs = self.model.specs()
+            sample_tree = (self._bank.tree(self._bank.names[0])
+                           if self._bank is not None else self.params)
+            self.shardings = partition.serving_shardings(
+                self.mesh, params=sample_tree, cache=self.cache,
+                state=self._state, specs=specs, cfg=self.model.cfg,
+                max_len=self.max_len,
+            )
+            if self._bank is not None:
+                from repro.runtime.bank import place_bank
+
+                place_bank(self._bank, self.mesh, specs)
+            else:
+                self.params = jax.device_put(self.params, self.shardings.params)
+            self.cache = jax.device_put(self.cache, self.shardings.cache)
+            self._state = jax.device_put(self._state, self.shardings.state)
+        if self.speculate is not None:
+            from repro.spec import SpeculativeDecoder
+
             self.spec = SpeculativeDecoder(
-                self.model, self.ctx, self._bank, self.speculate
+                self.model, self.ctx, self._bank, self.speculate,
+                shardings=self.shardings,
             )
             self.spec_telemetry = self.spec.telemetry
         # the two jitted hot paths: cache + slot state are donated so XLA
@@ -379,15 +430,23 @@ class BatchedServer:
         prefill_factory = (
             make_bucketed_prefill if self.batched_prefill else make_scan_prefill
         )
+        prefill_sharding_kwargs = {}
+        if self.shardings is not None:
+            sh, r = self.shardings, self.shardings.replicated
+            prefill_sharding_kwargs = dict(
+                # (tree, cache, state, tokens, plen, slot, key, temp, max_new);
+                # the tree inherits its committed placement (bank points carry
+                # distinct pytree aux data, so one shardings tree cannot
+                # describe them all) — cache/state are pinned so the donated
+                # carry round-trips at a fixed placement
+                in_shardings=(None, sh.cache, sh.state, r, r, r, r, r, r),
+                out_shardings=(r, r, sh.cache, sh.state),
+            )
         self.prefill = jax.jit(
             prefill_factory(self.model, self.ctx, self.max_len),
             donate_argnums=(1, 2),
+            **prefill_sharding_kwargs,
         )
-        self.cache = self.model.make_cache(self.slots, self.max_len, dtype=jnp.float32)
-        self.active: Dict[int, Request] = {}
-        self._state = _init_slot_state(self.slots)
-        self._slot_start = np.zeros((self.slots,), np.int32)  # committed KV rows
-        self.host_transfers = 0
 
     def _serving_tree(self):
         """The tree prefill / non-speculative decode executes at.
@@ -414,12 +473,13 @@ class BatchedServer:
         bucket = bucket_length(len(prompt), self.max_len)
         padded = np.zeros((1, bucket), np.int32)
         padded[0, : len(prompt)] = prompt
-        tok, margin, self.cache, self._state = self.prefill(
-            tree, self.cache, self._state, jnp.asarray(padded),
-            jnp.int32(len(prompt)), jnp.int32(slot),
-            jax.random.PRNGKey(seed), jnp.float32(req.temperature),
-            jnp.int32(req.max_new),
-        )
+        with self._scope():
+            tok, margin, self.cache, self._state = self.prefill(
+                tree, self.cache, self._state, jnp.asarray(padded),
+                jnp.int32(len(prompt)), jnp.int32(slot),
+                jax.random.PRNGKey(seed), jnp.float32(req.temperature),
+                jnp.int32(req.max_new),
+            )
         tok, margin = jax.device_get((tok, margin))
         self.host_transfers += 1
         self._slot_start[slot] = len(prompt)
@@ -500,13 +560,38 @@ class BatchedServer:
             steps=steps,
         ))
 
+    def _scope(self):
+        """Ambient context for the jitted hot-path calls. A no-op without a
+        mesh; with one it (a) installs the mesh so the model's activation
+        constraints (``partition.constrain``) bind to it at trace time and
+        (b) switches to partitionable threefry — the sharding-invariant PRNG
+        mode, so SAMPLED streams are identical across mesh shapes (the legacy
+        PRNG generates different bits when the vocab axis is sharded; greedy
+        decoding never samples and is bit-identical to ``mesh=None`` either
+        way)."""
+        if self.mesh is None:
+            return contextlib.nullcontext()
+        stack = contextlib.ExitStack()
+        stack.enter_context(jax.threefry_partitionable(True))
+        stack.enter_context(self.mesh)
+        return stack
+
     def decode_burst(self, sampled: bool = True):
         """The jitted burst step (``sampled=False``: the all-greedy variant)."""
         if sampled not in self._burst_fns:
+            sharding_kwargs = {}
+            if self.shardings is not None:
+                sh = self.shardings
+                buf = sh.slots((self.slots, self.burst))  # emit buffers
+                sharding_kwargs = dict(
+                    in_shardings=(None, sh.cache, sh.state),
+                    out_shardings=(sh.cache, sh.state, buf, buf),
+                )
             self._burst_fns[sampled] = jax.jit(
                 make_decode_burst(self.model, self.ctx, self.burst,
                                   sampled=sampled),
                 donate_argnums=(1, 2),
+                **sharding_kwargs,
             )
         return self._burst_fns[sampled]
 
@@ -515,9 +600,10 @@ class BatchedServer:
         device, one host transfer, per-slot budget clipping on the host."""
         point = self.controller.point if self.controller is not None else None
         sampled = any(r.temperature > 0.0 for r in self.active.values())
-        self.cache, self._state, toks, margins = self.decode_burst(sampled)(
-            self._serving_tree(), self.cache, self._state,
-        )
+        with self._scope():
+            self.cache, self._state, toks, margins = self.decode_burst(sampled)(
+                self._serving_tree(), self.cache, self._state,
+            )
         toks, margins = jax.device_get((toks, margins))
         self.host_transfers += 1
         emitted = 0
@@ -545,10 +631,11 @@ class BatchedServer:
         """
         st = self._state
         draft_point = self.controller.point if self.controller is not None else None
-        emitted, accepted, margins, self.cache, point = self.spec.round(
-            st["tok"], self.cache, st["key"], st["count"], st["temp"],
-            self._slot_start, draft_point=draft_point,
-        )
+        with self._scope():
+            emitted, accepted, margins, self.cache, point = self.spec.round(
+                st["tok"], self.cache, st["key"], st["count"], st["temp"],
+                self._slot_start, draft_point=draft_point,
+            )
         self.host_transfers += 1
         accs, emits, round_margins = [], [], []
         sync_slots, sync_toks, sync_counts = [], [], []

@@ -14,6 +14,7 @@ import dataclasses
 from typing import Dict, Optional, Sequence, Tuple
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
@@ -58,6 +59,8 @@ def _resolve(axis_name: Optional[str], dim: int, mesh: Mesh, report: list) -> Op
 
 
 def param_pspec(spec, mesh: Mesh, report: Optional[list] = None) -> P:
+    """PartitionSpec for one ParamSpec. Only touches ``mesh.axis_names`` /
+    ``mesh.shape``, so duck-typed stand-in meshes work (property tests)."""
     report = report if report is not None else []
     entries, used = [], set()
     for dim, ax in zip(spec.shape, spec.axes):
@@ -85,6 +88,138 @@ def sharding_report(specs, mesh: Mesh):
     """(logical_axis, dim, group, extent) tuples for every replication fallback."""
     _, report = param_shardings(specs, mesh)
     return report
+
+
+def prepared_shardings(params, specs, mesh: Mesh, report: Optional[list] = None):
+    """Shardings for a serving param tree (raw or ``prepare_params`` output).
+
+    The tree's structure matches ``specs`` except that engine-routed matmul
+    leaves may be :class:`PreparedWeight` containers (payload inherits the raw
+    leaf's rule-derived sharding; the per-channel scale inherits the entries of
+    the axes it shares with the payload — see ``PreparedWeight.placement``)
+    and tied-embedding trees carry a synthesized transposed ``lm_head`` (its
+    pspec comes from the embedding spec with shape/axes reversed). The result
+    is usable both for ``jax.device_put`` placement and as jit in/out
+    shardings.
+    """
+    from repro.core.backends import PreparedWeight  # local: avoids cycle
+    from repro.models.params import ParamSpec
+
+    report = report if report is not None else []
+    param_sh, rep = param_shardings(specs, mesh)
+    report.extend(rep)
+    if (
+        isinstance(params, dict)
+        and "lm_head" in params
+        and isinstance(param_sh, dict)
+        and "lm_head" not in param_sh
+    ):
+        embed = specs["embed"]
+        head_spec = ParamSpec(embed.shape[::-1], embed.axes[::-1])
+        param_sh = dict(
+            param_sh,
+            lm_head=NamedSharding(mesh, param_pspec(head_spec, mesh, report)),
+        )
+
+    def one(sh, leaf):
+        if isinstance(leaf, PreparedWeight):
+            return leaf.placement(sh)
+        return sh
+
+    return jax.tree.map(one, param_sh, params)
+
+
+def slot_pspec(shape, mesh: Mesh) -> P:
+    """Per-slot serving-state leaves (and KV slot axes): dim 0 over the batch
+    axes when the slot count divides their extent; replicated otherwise."""
+    axes = tuple(a for a in BATCH_AXES if a in mesh.axis_names)
+    extent = int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
+    if shape and axes and extent > 1 and shape[0] % extent == 0:
+        return P(axes)
+    return P()
+
+
+def slot_shardings(state_tree, mesh: Mesh):
+    """NamedShardings for the server's device-resident per-slot state."""
+    return jax.tree.map(
+        lambda l: NamedSharding(mesh, slot_pspec(l.shape, mesh)), state_tree
+    )
+
+
+@dataclasses.dataclass
+class ServingShardings:
+    """Every placement the serving hot path needs, derived from one mesh.
+
+    ``params`` matches the (possibly prepared) serving tree, ``cache`` the
+    multi-slot KV cache, ``state`` the per-slot decode state; ``report``
+    collects every rule the divisibility fallback dropped (params + the
+    synthesized lm_head).
+    """
+
+    mesh: Mesh
+    params: object
+    cache: object
+    state: object
+    report: list = dataclasses.field(default_factory=list)
+
+    @property
+    def replicated(self) -> NamedSharding:
+        return NamedSharding(self.mesh, P())
+
+    def slots(self, shape) -> NamedSharding:
+        """Sharding for a ``(slots, ...)`` emit buffer."""
+        return NamedSharding(self.mesh, slot_pspec(tuple(shape), self.mesh))
+
+
+def serving_shardings(mesh: Mesh, *, params, cache, state, specs, cfg,
+                      max_len: Optional[int] = None) -> ServingShardings:
+    """Build the full serving placement bundle for ``BatchedServer(mesh=...)``."""
+    report: list = []
+    params_sh = prepared_shardings(params, specs, mesh, report=report)
+    cache_sh = cache_shardings(cache, mesh, cfg, row_axis_len=max_len)
+    state_sh = slot_shardings(state, mesh)
+    return ServingShardings(mesh, params_sh, cache_sh, state_sh, report)
+
+
+def serving_sharding_report(sh: ServingShardings) -> Dict:
+    """JSON-able placement summary for a serving mesh.
+
+    ``dropped`` records every rule the divisibility fallback rejected (the
+    dims that silently replicate); ``params`` counts sharded vs replicated
+    weight leaves; ``cache``/``state`` list the pspec of each leaf.
+    """
+
+    def _spec_entries(tree):
+        out: Dict[str, str] = {}
+        flat, _ = jax.tree_util.tree_flatten_with_path(
+            tree, is_leaf=lambda x: isinstance(x, jax.sharding.Sharding)
+        )
+        for path, leaf in flat:
+            key = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+            out[key] = str(leaf.spec)
+        return out
+
+    param_leaves = [
+        l
+        for l in jax.tree.leaves(
+            sh.params, is_leaf=lambda x: isinstance(x, jax.sharding.Sharding)
+        )
+        if isinstance(l, jax.sharding.Sharding)
+    ]
+    n_sharded = sum(1 for l in param_leaves if tuple(l.spec))
+    return {
+        "mesh": {a: int(sh.mesh.shape[a]) for a in sh.mesh.axis_names},
+        "dropped": [
+            {"axis": a, "dim": int(d), "mesh_axes": list(g), "extent": int(e)}
+            for a, d, g, e in sh.report
+        ],
+        "params": {
+            "sharded": n_sharded,
+            "replicated": len(param_leaves) - n_sharded,
+        },
+        "cache": _spec_entries(sh.cache),
+        "state": _spec_entries(sh.state),
+    }
 
 
 def batch_pspec(mesh: Mesh, *, extra: Sequence[Optional[str]] = ()) -> P:
@@ -188,11 +323,17 @@ def use_2d_ep(num_experts: int) -> bool:
     return extent > 1 and num_experts % extent == 0
 
 
-def cache_shardings(cache_tree, mesh: Mesh, cfg):
+def cache_shardings(cache_tree, mesh: Mesh, cfg, *, row_axis_len: Optional[int] = None):
     """KV caches: batch over (pod, data); kv_heads/model-dim over model when divisible.
 
     Cache layouts (see models/*): attn (L, B, S, KV, hd) | mla latent
     (L, B, S, R) | ssm conv (L, B, W, C) / state (L, B, H, N, P).
+
+    ``row_axis_len`` (the serving path passes ``max_len``) marks the sequence
+    row axis: trailing dims of that extent are excluded from model-sharding
+    and the EARLIEST remaining divisible dim wins — that is the heads/latent
+    axis, the one the weight rules already shard, so decode never reshards
+    rows. Without it (dry-run compatibility) the largest trailing dim wins.
     """
     batch_axes = tuple(a for a in BATCH_AXES if a in mesh.axis_names)
     batch_extent = int(np.prod([mesh.shape[a] for a in batch_axes])) if batch_axes else 1
@@ -202,14 +343,27 @@ def cache_shardings(cache_tree, mesh: Mesh, cfg):
         shape = leaf.shape
         if len(shape) <= 1:  # stacked index scalars
             return NamedSharding(mesh, P())
+        if hasattr(leaf, "dtype") and jnp.issubdtype(leaf.dtype, jnp.integer):
+            # (L, B) write-index vectors: these are the decode scatter's
+            # indices — GSPMD wants scatter indices replicated (sharding
+            # them trips the partitioner's index-broadcast lowering inside
+            # the burst scan), and at L*B int32 they are free to replicate
+            return NamedSharding(mesh, P())
         entries: list = [None] * len(shape)
         if shape[1] % max(batch_extent, 1) == 0:
             entries[1] = batch_axes  # B dim (dim 0 is layers)
-        # shard the largest trailing dim over model when divisible
         best = None
         for i in range(2, len(shape)):
+            if row_axis_len is not None and i == 2 and shape[i] == row_axis_len:
+                # the S row axis — dim 2 of the (L, B, S, ...) row-cache
+                # layouts: decode writes here, never shard it. (Position AND
+                # extent are checked so a trailing dim that happens to equal
+                # max_len is not silently excluded from model-sharding.)
+                continue
             if shape[i] % model_extent == 0 and shape[i] >= model_extent:
-                if best is None or shape[i] > shape[best]:
+                if best is None:
+                    best = i
+                elif row_axis_len is None and shape[i] > shape[best]:
                     best = i
         if best is not None:
             entries[best] = "model"

@@ -25,7 +25,8 @@ class SpeculativeDecoder:
     """Draft-k-then-verify serving rounds over a multi-point weight bank."""
 
     def __init__(self, model: ModelApi, ctx: EngineContext,
-                 bank: MultiPointBank, cfg: Optional[SpecConfig] = None):
+                 bank: MultiPointBank, cfg: Optional[SpecConfig] = None, *,
+                 shardings=None):
         self.cfg = cfg or SpecConfig()
         self.bank = bank
         self.verify_point = self.cfg.verify_point or bank.reference
@@ -47,12 +48,30 @@ class SpeculativeDecoder:
         # the cache is donated through both halves of the round (draft writes
         # scratch rows in place, verify overwrites them and rolls back), so a
         # round never copies the KV buffers; emit/accept/margin buffers stay
-        # on device until the caller's single host transfer
+        # on device until the caller's single host transfer. With a sharded
+        # server (``shardings`` = the partition.ServingShardings bundle), the
+        # cache is pinned to its serving placement through both jits so the
+        # donated carry never reshards mid-round; everything else is inferred
+        # from the committed bank trees / slot state.
+        draft_kwargs, verify_kwargs = {}, {}
+        if shardings is not None:
+            c = shardings.cache
+            draft_kwargs = dict(
+                in_shardings=(None, None, c, None, None, None, None),
+                out_shardings=(None, None, c),
+            )
+            verify_kwargs = dict(
+                in_shardings=(None, None, None, None, c, None, None, None,
+                              None, None),
+                out_shardings=(None, None, None, c),
+            )
         self.draft_loop = jax.jit(
-            make_draft_loop(model, ctx, self.cfg.draft_len), donate_argnums=(2,)
+            make_draft_loop(model, ctx, self.cfg.draft_len), donate_argnums=(2,),
+            **draft_kwargs,
         )
         self.verify = jax.jit(
-            make_verify_step(model, ctx, self.cfg.draft_len), donate_argnums=(4,)
+            make_verify_step(model, ctx, self.cfg.draft_len), donate_argnums=(4,),
+            **verify_kwargs,
         )
         self.telemetry = SpecTelemetry.for_bank(bank, self.cfg.draft_len)
         self._round = 0

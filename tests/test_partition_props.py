@@ -1,0 +1,163 @@
+"""Property tests for the logical-axis sharding rules (sharding/partition.py).
+
+``param_pspec`` / ``_resolve`` only read ``mesh.axis_names`` and
+``mesh.shape``, so a duck-typed stand-in mesh drives them through thousands
+of (rule, dim, mesh-extent) combinations without any devices:
+
+* the divisibility fallback NEVER shards a non-dividing dim;
+* the rule preference order is respected (first dividing group wins);
+* ``report`` records EVERY dropped rule (each group tried before the
+  winner, with the extent that failed to divide);
+* one mesh axis is never claimed by two dims of the same spec.
+
+Uses ``tests/_hypothesis_compat.py``: without hypothesis installed the
+property tests skip individually and the plain tests still run.
+"""
+import numpy as np
+import pytest
+
+from jax.sharding import PartitionSpec as P
+
+from _hypothesis_compat import HAVE_HYPOTHESIS, given, settings, st
+from repro.models.params import ParamSpec
+from repro.sharding import partition
+
+
+class FakeMesh:
+    """Duck-typed mesh: axis_names + shape mapping, no devices needed."""
+
+    def __init__(self, sizes):
+        self.shape = dict(sizes)
+        self.axis_names = tuple(self.shape)
+
+
+RULE_AXES = [a for a in partition.PARAM_RULES if a is not None]
+
+if HAVE_HYPOTHESIS:
+    mesh_sizes = st.fixed_dictionaries({
+        "pod": st.sampled_from([1, 2]),
+        "data": st.sampled_from([1, 2, 3, 4, 8, 16]),
+        "model": st.sampled_from([1, 2, 3, 4, 8, 16]),
+    })
+    dims = st.integers(min_value=1, max_value=512)
+    axes = st.sampled_from(RULE_AXES)
+else:  # placeholders; @given replaces the bodies with skippers
+    mesh_sizes = dims = axes = None
+
+
+def _extent(mesh, group):
+    return int(np.prod([mesh.shape[a] for a in group]))
+
+
+@given(axes, dims, mesh_sizes)
+@settings(max_examples=200, deadline=None)
+def test_resolve_never_shards_non_dividing_dim(axis, dim, sizes):
+    mesh = FakeMesh(sizes)
+    report = []
+    group = partition._resolve(axis, dim, mesh, report)
+    if group is not None:
+        assert dim % _extent(mesh, group) == 0
+
+
+@given(axes, dims, mesh_sizes)
+@settings(max_examples=200, deadline=None)
+def test_resolve_respects_preference_order(axis, dim, sizes):
+    """The winner is the FIRST candidate group (restricted to present mesh
+    axes) whose extent divides the dim."""
+    mesh = FakeMesh(sizes)
+    group = partition._resolve(axis, dim, mesh, [])
+    candidates = []
+    for g in partition.PARAM_RULES[axis]:
+        g = tuple(a for a in g if a in mesh.axis_names)
+        if g:
+            candidates.append(g)
+    dividing = [g for g in candidates if dim % _extent(mesh, g) == 0]
+    assert group == (dividing[0] if dividing else None)
+
+
+@given(axes, dims, mesh_sizes)
+@settings(max_examples=200, deadline=None)
+def test_resolve_reports_every_dropped_rule(axis, dim, sizes):
+    """Each candidate tried before the winner that failed divisibility lands
+    in the report as (axis, dim, group, extent)."""
+    mesh = FakeMesh(sizes)
+    report = []
+    group = partition._resolve(axis, dim, mesh, report)
+    expected = []
+    for g in partition.PARAM_RULES[axis]:
+        g = tuple(a for a in g if a in mesh.axis_names)
+        if not g:
+            continue
+        if dim % _extent(mesh, g) == 0:
+            break  # the winner: nothing after it is tried
+        expected.append((axis, dim, g, _extent(mesh, g)))
+    assert report == expected
+    for a, d, g, e in report:
+        assert d % e != 0  # a dropped rule is always a non-dividing one
+
+
+@given(
+    st.lists(st.tuples(axes, dims), min_size=1, max_size=5),
+    mesh_sizes,
+)
+@settings(max_examples=200, deadline=None)
+def test_param_pspec_no_duplicate_mesh_axes(dims_axes, sizes):
+    mesh = FakeMesh(sizes)
+    spec = ParamSpec(
+        tuple(d for _, d in dims_axes), tuple(a for a, _ in dims_axes)
+    )
+    ps = partition.param_pspec(spec, mesh)
+    assert len(ps) <= len(spec.shape)  # trailing Nones trimmed
+    used = []
+    for entry in ps:
+        if entry is None:
+            continue
+        used.extend(entry if isinstance(entry, tuple) else (entry,))
+    assert len(used) == len(set(used))
+    if tuple(ps):
+        assert ps[-1] is not None  # trimmed
+
+
+@given(st.lists(st.tuples(axes, dims), min_size=1, max_size=5), mesh_sizes)
+@settings(max_examples=200, deadline=None)
+def test_param_pspec_entries_divide_dims(dims_axes, sizes):
+    mesh = FakeMesh(sizes)
+    spec = ParamSpec(
+        tuple(d for _, d in dims_axes), tuple(a for a, _ in dims_axes)
+    )
+    ps = partition.param_pspec(spec, mesh)
+    for dim, entry in zip(spec.shape, tuple(ps)):
+        if entry is None:
+            continue
+        group = entry if isinstance(entry, tuple) else (entry,)
+        assert dim % _extent(mesh, group) == 0
+
+
+# ---------------------------------------------------------------------------
+# plain (non-hypothesis) regressions
+# ---------------------------------------------------------------------------
+
+
+def test_param_pspec_known_case():
+    mesh = FakeMesh({"data": 4, "model": 2})
+    spec = ParamSpec((64, 16, 7), ("embed", "heads", "head_dim"))
+    ps = partition.param_pspec(spec, mesh)
+    # single-axis groups enter as bare strings (P normalization on this jax
+    # treats ("data",) and "data" as distinct specs)
+    assert ps == P("data", "model")
+
+
+def test_param_pspec_fallback_reported():
+    mesh = FakeMesh({"data": 4, "model": 16})
+    report = []
+    spec = ParamSpec((40,), ("heads",))  # 40 heads on a 16-way model axis
+    assert partition.param_pspec(spec, mesh, report) == P()
+    assert report == [("heads", 40, ("model",), 16)]
+
+
+def test_slot_pspec_divisibility():
+    mesh = FakeMesh({"data": 4, "model": 2})
+    assert partition.slot_pspec((8, 3), mesh) == P(("data",))
+    assert partition.slot_pspec((6, 3), mesh) == P()  # 6 % 4 != 0
+    assert partition.slot_pspec((), mesh) == P()
+    assert partition.slot_pspec((8,), FakeMesh({"model": 2})) == P()
