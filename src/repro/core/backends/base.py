@@ -45,22 +45,30 @@ class PreparedWeight:
     is a hashable tuple of (key, value) pairs recording the preparation point
     (depth / format / effective bits) — it travels as pytree aux data, so a
     prepared tree re-specializes jit programs when the preparation changes.
+    ``point`` is the opposite: a small *traced* int32 params vector (kernel
+    backend) carrying per-execution-point values (dot depth, quantization
+    formats) as data, so switching points swaps arrays instead of programs.
     """
 
     data: Any
     scale: Any = None
     backend: str = "exact"
     meta: Tuple[Tuple[str, Any], ...] = ()
+    point: Any = None
 
     # -- pytree protocol ----------------------------------------------------
     def tree_flatten(self):
-        return (self.data, self.scale), (self.backend, self.meta)
+        # ``point`` (the kernel backend's runtime params vector) is a CHILD,
+        # not aux data: execution points that differ only in depth/format
+        # share one treedef, so a ModeController switch swaps arrays without
+        # retracing jitted serving programs.
+        return (self.data, self.scale, self.point), (self.backend, self.meta)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        data, scale = children
+        data, scale, point = children
         backend, meta = aux
-        return cls(data, scale, backend, meta)
+        return cls(data, scale, backend, meta, point)
 
     # -- array-ish surface (what model code touches before ctx.dot) ---------
     @property
@@ -103,7 +111,7 @@ class PreparedWeight:
                     f"cannot reshape per-channel scale {self.scale.shape} for "
                     f"{self.data.shape} -> {data.shape}"
                 )
-        return PreparedWeight(data, scale, self.backend, self.meta)
+        return PreparedWeight(data, scale, self.backend, self.meta, self.point)
 
     def placement(self, data_sharding):
         """Sharding container mirroring this leaf, for device_put / jit.
@@ -131,7 +139,13 @@ class PreparedWeight:
             while spec and spec[-1] is None:
                 spec.pop()
             scale_sh = NamedSharding(data_sharding.mesh, PartitionSpec(*spec))
-        return PreparedWeight(data_sharding, scale_sh, self.backend, self.meta)
+        point_sh = None
+        if self.point is not None:
+            # the params vector is tiny and read by every shard: replicate
+            point_sh = NamedSharding(data_sharding.mesh, PartitionSpec())
+        return PreparedWeight(
+            data_sharding, scale_sh, self.backend, self.meta, point_sh
+        )
 
     @property
     def T(self):
@@ -141,7 +155,8 @@ class PreparedWeight:
                 "scale onto the contraction axis; prepare the transposed "
                 "tensor instead (prepare_params does this for tied lm_head)"
             )
-        return PreparedWeight(self.data.T, None, self.backend, self.meta)
+        return PreparedWeight(self.data.T, None, self.backend, self.meta,
+                              self.point)
 
 
 class Backend:

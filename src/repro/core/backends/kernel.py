@@ -1,11 +1,23 @@
-"""kernel backend: the Pallas ``cordic_mac`` kernel (same math as carmen).
+"""kernel backend: the Pallas CORDIC kernels (same math as carmen).
 
 Prepared path: weights are signed-digit-rounded once (the PE weight memory
-bank); the kernel is invoked with ``w_prequantized=True`` so its epilogue only
-re-grids the already-rounded values (an exact integer cast) instead of
-re-running the rounding recurrence per call.
+bank) and the execution point's dot parameters — CORDIC depth, activation and
+weight quantization formats — ride in a small *traced* int32 ``point`` vector
+on the :class:`PreparedWeight` (``make_point``).  The fused dot+AF kernel
+(``kernels/cordic_fused``) consumes that vector as a scalar-prefetch operand,
+so one compiled program serves every :class:`~repro.runtime.bank.ExecutionPoint`
+and a ModeController switch swaps arrays, never programs.  When the Pallas
+kernel is unavailable (mesh-sharded params, CPU under ``fused="auto"``,
+oversized contraction dim) the bitwise-identical pure-XLA chain
+(``cordic_fused.ref``) runs instead — the parity tests gate on exact equality.
+
+The per-call path (raw float weights, static formats from the policy) still
+runs the standalone ``cordic_mac`` kernel, as does the legacy prepared layout
+that carried static formats in ``meta``.
 """
 from __future__ import annotations
+
+import jax.numpy as jnp
 
 from .. import cordic
 from ..fxp import FxPFormat
@@ -14,24 +26,60 @@ from .base import Backend, PreparedWeight, unit_fmt
 __all__ = ["KernelBackend"]
 
 
+def _use_fused(ctx, k: int) -> bool:
+    """Pallas kernel vs XLA fallback for the fused chain (values identical)."""
+    from repro.kernels.cordic_fused.ops import _interpret_default, fuse_supported
+    from repro.sharding.partition import current_mesh_axes
+
+    fused = getattr(ctx, "fused", "auto")
+    if fused == "off" or not fuse_supported(k) or current_mesh_axes():
+        return False
+    if fused == "on":
+        return True
+    return not _interpret_default()  # auto: native TPU only
+
+
 class KernelBackend(Backend):
     name = "kernel"
 
     def prepare(self, w, lp, *, stacked_axes: int = 0, in_axes=None):
+        from repro.kernels.cordic_fused import POINT_LEN, make_point
+
         fmt = unit_fmt(lp.fmt)
         data = cordic.signed_digit_round(w, int(lp.depth), fmt)
-        # x_fmt: bank-carried activation format (see CarmenBackend.prepare)
-        return PreparedWeight(
-            data, None, self.name,
-            (("depth", int(lp.depth)), ("fmt", (fmt.bits, fmt.frac)),
-             ("x_fmt", (lp.fmt.bits, lp.fmt.frac))),
+        point = make_point(int(lp.depth), lp.fmt, fmt)
+        if stacked_axes:
+            # stacked layer banks are consumed as lax.scan xs: give each
+            # layer slice its own copy of the params vector
+            point = jnp.broadcast_to(
+                point, w.shape[:stacked_axes] + (POINT_LEN,)
+            )
+        # meta stays empty so every execution point shares one treedef
+        return PreparedWeight(data, None, self.name, (), point)
+
+    def _fused(self, ctx, x, w, af_mode: str, name: str):
+        from repro.kernels.cordic_fused import fused_dot_af, fused_dot_af_ref
+
+        lp_af = ctx.layer_precision("af")
+        fn = fused_dot_af if _use_fused(ctx, x.shape[-1]) else fused_dot_af_ref
+        out = fn(
+            x, w.data, w.point,
+            af_mode=af_mode,
+            af_depth=int(lp_af.depth),
+            af_fmt=lp_af.fmt,
+            compute_round=ctx.compute_dtype != jnp.float32,
         )
+        return out.astype(ctx.compute_dtype)
 
     def dot(self, ctx, x, w, *, name: str = ""):
+        if isinstance(w, PreparedWeight) and w.point is not None:
+            return self._fused(ctx, x, w, "identity", name)
+
         from repro.kernels.cordic_mac import ops as mac_ops
 
         x2 = x.reshape(-1, x.shape[-1])
         if isinstance(w, PreparedWeight):
+            # legacy prepared leaf: static formats in meta
             bits, frac = w.get("fmt")
             x_fmt = w.get("x_fmt")
             x_fmt = (
@@ -47,3 +95,15 @@ class KernelBackend(Backend):
                 x2, w, depth=int(lp.depth), x_fmt=lp.fmt, w_fmt=unit_fmt(lp.fmt)
             )
         return out.reshape(x.shape[:-1] + (w.shape[-1],)).astype(ctx.compute_dtype)
+
+    def dot_af(self, ctx, x, w, *, af: str, name: str = ""):
+        """Fused dot + activation epilogue; NotImplemented -> caller unfuses."""
+        from repro.kernels.cordic_fused import FUSED_AFS
+
+        if not (
+            isinstance(w, PreparedWeight)
+            and w.point is not None
+            and af in FUSED_AFS
+        ):
+            return NotImplemented
+        return self._fused(ctx, x, w, af, name)

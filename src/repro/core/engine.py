@@ -68,14 +68,24 @@ class EngineContext:
     mode: str = "exact"  # exact | carmen | int8 | kernel
     policy: Optional[PrecisionPolicy] = None
     compute_dtype: jnp.dtype = jnp.bfloat16
-    # attention lowering: "xla" (query-chunked, scores materialize per chunk)
-    # or "flash" (KV-chunked online softmax; pure-JAX twin of the Pallas
-    # flash kernel — bit-tested against it; scores never exceed tile size)
+    # attention lowering: "xla" (query-chunked, scores materialize per chunk),
+    # "flash" (KV-chunked online softmax; pure-JAX twin of the Pallas
+    # flash kernel — bit-tested against it; scores never exceed tile size),
+    # or "decode_kernel" (cache-decode path only: Pallas per-query-causal
+    # GQA/MLA kernels over the slot KV cache — token streams identical to
+    # the XLA chain, raw outputs ulp-close; falls back under a mesh)
     attn_impl: str = "xla"
     # emit dots in compute_dtype so TP partial-sums all-reduce in bf16
     # (Megatron-style; halves activation collective volume; MXU still
     # accumulates fp32 internally per tile)
     tp_reduce_bf16: bool = False
+    # fused Pallas dot+AF path (kernel backend, prepared weights):
+    #   "auto" — fuse on native TPU with no active mesh; CPU/interpret and
+    #            mesh-sharded params run the bitwise-equal XLA chain
+    #   "on"   — fuse wherever the kernel supports the shape (tests/bench
+    #            exercise the interpret-mode kernel this way)
+    #   "off"  — always the XLA chain
+    fused: str = "auto"
 
     def layer_precision(self, name: str) -> LayerPrecision:
         policy = self.policy or PrecisionPolicy.accurate(FXP8)
@@ -90,3 +100,36 @@ class EngineContext:
         if b is not None:
             out = out + b.astype(out.dtype)
         return out
+
+    def activate(self, x, af: str):
+        """Activation through the CARMEN multi-AF block (or the exact ref)."""
+        if af == "identity":
+            return x
+        if self.mode == "exact":
+            from .activations import af_ref
+
+            return af_ref(x, af).astype(x.dtype)
+        if self.mode == "kernel":
+            from repro.kernels.cordic_af.ops import multi_af_pallas
+
+            lp = self.layer_precision("af")
+            return multi_af_pallas(
+                x, af, depth=int(lp.depth), fmt=lp.fmt
+            ).astype(x.dtype)
+        from .activations import multi_af_float
+
+        lp = self.layer_precision("af")
+        return multi_af_float(x, af, lp.depth, lp.fmt).astype(x.dtype)
+
+    def linear_af(self, x, w, b=None, *, af: str, name: str = ""):
+        """Linear followed by an activation, fused into one kernel pass when
+        the dispatched backend offers ``dot_af`` (kernel backend, prepared
+        weights, elementwise AF); otherwise the unfused linear -> multi-AF
+        chain with identical values."""
+        backend = resolve(w, self.mode)
+        dot_af = getattr(backend, "dot_af", None)
+        if b is None and dot_af is not None:
+            out = dot_af(self, x, w, af=af, name=name)
+            if out is not NotImplemented:
+                return out
+        return self.activate(self.linear(x, w, b, name=name), af)

@@ -1,6 +1,8 @@
 """jit'd wrapper for the multi-AF Pallas kernel."""
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
 
@@ -10,7 +12,9 @@ from repro.core.fxp import FXP8, FxPFormat
 from . import kernel as _k
 
 
+@functools.lru_cache(maxsize=1)
 def _interpret_default() -> bool:
+    # cached: see kernels/cordic_mac/ops.py — one probe per process
     return jax.default_backend() == "cpu"
 
 

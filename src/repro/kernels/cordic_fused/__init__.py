@@ -1,0 +1,12 @@
+from .kernel import FUSED_AFS, POINT_LEN, af_epilogue, make_point
+from .ops import fused_dot_af, fused_dot_af_ref, fuse_supported
+
+__all__ = [
+    "FUSED_AFS",
+    "POINT_LEN",
+    "af_epilogue",
+    "make_point",
+    "fused_dot_af",
+    "fused_dot_af_ref",
+    "fuse_supported",
+]

@@ -1,0 +1,128 @@
+"""Fused CORDIC dot + activation epilogue — one VMEM-resident Pallas pass.
+
+The unfused kernel path materializes the prepared-dot output to HBM, then
+re-reads it through ``multi_af_pallas``.  This kernel performs the whole
+per-layer chain in one pass over the output tile:
+
+    quantize(x) -> int32 dot against the signed-digit weight grid
+                -> descale -> (optional compute-dtype round)
+                -> time-multiplexed CORDIC activation -> f32 out
+
+Everything that varies across :class:`~repro.runtime.bank.ExecutionPoint`\\ s —
+CORDIC dot depth, activation-format parameters, and the AF mode selector —
+rides in a small int32 *params* vector delivered as a scalar-prefetch operand
+(``pltpu.PrefetchScalarGridSpec``).  The compiled program is therefore
+identical for every point: a ModeController switch swaps the vector, not the
+kernel.
+
+Bit-parity strategy: the matmul is an exact int32 x int32 dot.  Activations
+are quantized in-kernel (round-half-even, saturate) and the signed-digit grid
+values are multiples of ``2**-w_frac``, so ``round(w * 2**w_frac)`` recovers
+the weight integers exactly.  Integer accumulation is order-independent, so
+the pure-XLA reference (:func:`repro.kernels.cordic_fused.ref`) running the
+identical chain is bitwise equal — for FXP8 *and* FXP16 — regardless of tile
+order.  The activation epilogue reuses the same fixed-point `multi_af` library
+as the standalone ``cordic_af`` kernel.
+
+The params vector layout (``make_point`` builds the first five entries; the
+op appends the AF mode index):
+
+    [0] dot CORDIC depth (informational — baked into the prepared grid)
+    [1] activation fraction bits  (x_frac)
+    [2] activation qmin
+    [3] activation qmax
+    [4] weight fraction bits      (w_frac)
+    [5] AF mode index into FUSED_AFS
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import activations as afs
+from repro.core import fxp
+
+from ..cordic_af.kernel import ELEMENTWISE_AFS
+
+# Mode 0 is a plain (no-activation) prepared dot so attention/output
+# projections share the same compiled kernel as MLP gate/up projections.
+FUSED_AFS = ("identity",) + ELEMENTWISE_AFS
+
+# params-vector indices
+P_DEPTH = 0
+P_XFRAC = 1
+P_XQMIN = 2
+P_XQMAX = 3
+P_WFRAC = 4
+P_MODE = 5
+POINT_LEN = 5  # entries owned by make_point; P_MODE is appended per call
+PARAM_LEN = 6
+
+
+def make_point(depth: int, x_fmt: fxp.FxPFormat, w_fmt: fxp.FxPFormat):
+    """Pack an execution point's dot parameters into the int32 params vector.
+
+    The result is a *traced-compatible* array: swapping it between calls does
+    not retrace, which is the whole trick behind zero-cost mode switches.
+    """
+    return jnp.asarray(
+        [int(depth), x_fmt.frac, x_fmt.qmin, x_fmt.qmax, w_fmt.frac],
+        jnp.int32,
+    )
+
+
+def af_epilogue(h, mode, af_depth, af_fmt, compute_round):
+    """The shared activation chain applied to the f32 dot output ``h``.
+
+    ``mode`` may be a static string (XLA reference path) or a traced int32
+    scalar indexing :data:`FUSED_AFS` (kernel path, via ``lax.switch``).  Both
+    run the exact same ops so the two paths stay bitwise identical.
+    """
+    ifmt = afs.internal_fmt(af_fmt)
+    d = max(int(af_depth) + (ifmt.frac - af_fmt.frac), 2)
+
+    def _apply(v, name):
+        if name == "identity":
+            return v
+        if compute_round:
+            # the unfused path hands the dot output to apply_af in the
+            # compute dtype; reproduce that single rounding here
+            v = v.astype(jnp.bfloat16).astype(jnp.float32)
+        xq = fxp.requantize(fxp.quantize(v, af_fmt), af_fmt, ifmt)
+        raw = afs.multi_af(xq, name, d, ifmt)
+        return fxp.dequantize(fxp.requantize(raw, ifmt, af_fmt), af_fmt)
+
+    if isinstance(mode, str):
+        return _apply(h, mode)
+    branches = [functools.partial(_apply, name=name) for name in FUSED_AFS]
+    return jax.lax.switch(mode, branches, h)
+
+
+def fused_kernel(params_ref, x_ref, w_ref, out_ref, *, af_depth, af_fmt,
+                 compute_round):
+    """grid = (M // bm, N // bn); x tile (bm, K), w tile (K, bn)."""
+    x_frac = params_ref[P_XFRAC]
+    qmin = params_ref[P_XQMIN].astype(jnp.float32)
+    qmax = params_ref[P_XQMAX].astype(jnp.float32)
+    w_frac = params_ref[P_WFRAC]
+
+    x_scale = jnp.exp2(x_frac.astype(jnp.float32))
+    w_scale = jnp.exp2(w_frac.astype(jnp.float32))
+
+    xq = jnp.clip(jnp.round(x_ref[...].astype(jnp.float32) * x_scale),
+                  qmin, qmax).astype(jnp.int32)
+    # signed-digit grid values are exact multiples of 2**-w_frac, so this
+    # recovers the weight integers exactly
+    wq = jnp.round(w_ref[...].astype(jnp.float32) * w_scale).astype(jnp.int32)
+
+    acc = jax.lax.dot_general(
+        xq, wq, (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32
+    )
+    h = (acc.astype(jnp.float32) * jnp.exp2(-x_frac.astype(jnp.float32))
+         ) * jnp.exp2(-w_frac.astype(jnp.float32))
+
+    out_ref[...] = af_epilogue(h, params_ref[P_MODE], af_depth, af_fmt,
+                               compute_round)

@@ -35,7 +35,10 @@ from repro.core.fxp import FXP8, FXP8_UNIT, FxPFormat, quantize
 from . import kernel as _k
 
 
+@functools.lru_cache(maxsize=1)
 def _interpret_default() -> bool:
+    # cached: jax.default_backend() walks the backend registry on every call,
+    # and this probe sits on the per-layer hot path
     return jax.default_backend() == "cpu"
 
 

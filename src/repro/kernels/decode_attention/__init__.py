@@ -1,0 +1,3 @@
+from .ops import gqa_decode_attention, mla_decode_attention
+
+__all__ = ["gqa_decode_attention", "mla_decode_attention"]

@@ -1,13 +1,17 @@
 """jit'd wrapper: model-layout (B, S, H/KV, D) GQA -> flash kernel."""
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
 
 from . import kernel as _k
 
 
+@functools.lru_cache(maxsize=1)
 def _interpret_default() -> bool:
+    # cached: see kernels/cordic_mac/ops.py — one probe per process
     return jax.default_backend() == "cpu"
 
 

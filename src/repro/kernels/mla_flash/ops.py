@@ -1,6 +1,7 @@
 """jit'd wrapper: MLA model quantities -> the shared-latent flash kernel."""
 from __future__ import annotations
 
+import functools
 import math
 
 import jax
@@ -9,7 +10,9 @@ import jax.numpy as jnp
 from . import kernel as _k
 
 
+@functools.lru_cache(maxsize=1)
 def _interpret_default() -> bool:
+    # cached: see kernels/cordic_mac/ops.py — one probe per process
     return jax.default_backend() == "cpu"
 
 

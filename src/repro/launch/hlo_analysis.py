@@ -74,13 +74,36 @@ class Computation:
     param_shapes: Dict[str, Tuple[str, str]]
 
 
+def _split_args(s: str) -> List[str]:
+    """Split an HLO operand list on top-level commas only — operand shapes
+    (``f32[32,64]{1,0}``) carry commas inside brackets/braces."""
+    parts: List[str] = []
+    depth, cur = 0, []
+    for ch in s:
+        if ch in "[{(":
+            depth += 1
+        elif ch in "]})":
+            depth -= 1
+        if ch == "," and depth == 0:
+            parts.append("".join(cur))
+            cur = []
+        else:
+            cur.append(ch)
+    if cur:
+        parts.append("".join(cur))
+    return [p.strip() for p in parts if p.strip()]
+
+
 def _parse_operands(line: str, op: str) -> List[str]:
     m = re.search(re.escape(op) + r"\(([^)]*)\)", line)
     if not m:
         return []
     names = []
-    for tok in m.group(1).split(","):
-        tok = tok.strip()
+    for tok in _split_args(m.group(1)):
+        # typed operand form: "f32[32,64]{1,0} %name" — the reference is the
+        # trailing whitespace-separated token; bare "%name"/"name" pass through
+        fields = tok.split()
+        tok = fields[-1] if fields else tok
         if tok.startswith("%"):
             names.append(tok[1:])
         elif re.match(r"^[\w.\-]+$", tok):

@@ -17,7 +17,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core import EngineContext, multi_af_float
+from repro.core import EngineContext
 from repro.core.normalization import layernorm, nonparametric_ln, rmsnorm
 from repro.configs.base import ModelConfig
 from repro.sharding.partition import constrain
@@ -54,17 +54,7 @@ def apply_norm(p, x, cfg: ModelConfig):
 
 def apply_af(x, mode: str, ctx: EngineContext):
     """Activation through the CARMEN multi-AF block (or the exact ref)."""
-    if ctx.mode == "exact":
-        from repro.core.activations import af_ref
-
-        return af_ref(x, mode).astype(x.dtype)
-    if ctx.mode == "kernel":
-        from repro.kernels.cordic_af.ops import multi_af_pallas
-
-        lp = ctx.layer_precision("af")
-        return multi_af_pallas(x, mode, depth=int(lp.depth), fmt=lp.fmt).astype(x.dtype)
-    lp = ctx.layer_precision("af")
-    return multi_af_float(x, mode, lp.depth, lp.fmt).astype(x.dtype)
+    return ctx.activate(x, mode)
 
 
 # ---------------------------------------------------------------------------
@@ -262,18 +252,29 @@ def attention(p, x, cfg: ModelConfig, ctx: EngineContext, *, positions, name, ca
         ck = cache_row_write(cache["k"], k, idx)
         cv = cache_row_write(cache["v"], v, idx)
         s_max = ck.shape[1]
-        k_pos = jnp.arange(s_max)
-        # per-query causal validity: query at position p sees keys <= p. With
-        # s == 1 this is the classic decode mask; with s > 1 (batched prefill
-        # writing a whole prompt at once) it is causal within the new block.
-        valid = k_pos[None, None, :] <= positions[:, :, None]  # (B, Sq, Smax)
         scale = 1.0 / math.sqrt(hd)
-        ckr = jnp.repeat(ck, g, axis=2) if g > 1 else ck
-        cvr = jnp.repeat(cv, g, axis=2) if g > 1 else cv
-        scores = jnp.einsum("bqhd,bshd->bhqs", q.astype(jnp.float32), ckr.astype(jnp.float32))
-        scores = jnp.where(valid[:, None], scores * scale, -1e30)
-        probs = jax.nn.softmax(scores, axis=-1)
-        out = jnp.einsum("bhqs,bshd->bqhd", probs.astype(cvr.dtype), cvr)
+        from repro.sharding.partition import current_mesh_axes
+
+        if ctx.attn_impl == "decode_kernel" and not current_mesh_axes():
+            # Pallas cache-decode kernel: GQA resolved by index maps (no
+            # repeated-KV materialization), (S, Smax) score tile stays in
+            # VMEM. Mesh-sharded caches keep the XLA chain below.
+            from repro.kernels.decode_attention import gqa_decode_attention
+
+            out = gqa_decode_attention(q, ck, cv, positions, scale=scale)
+        else:
+            k_pos = jnp.arange(s_max)
+            # per-query causal validity: query at position p sees keys <= p.
+            # With s == 1 this is the classic decode mask; with s > 1 (batched
+            # prefill writing a whole prompt at once) it is causal within the
+            # new block.
+            valid = k_pos[None, None, :] <= positions[:, :, None]  # (B, Sq, Smax)
+            ckr = jnp.repeat(ck, g, axis=2) if g > 1 else ck
+            cvr = jnp.repeat(cv, g, axis=2) if g > 1 else cv
+            scores = jnp.einsum("bqhd,bshd->bhqs", q.astype(jnp.float32), ckr.astype(jnp.float32))
+            scores = jnp.where(valid[:, None], scores * scale, -1e30)
+            probs = jax.nn.softmax(scores, axis=-1)
+            out = jnp.einsum("bhqs,bshd->bqhd", probs.astype(cvr.dtype), cvr)
         new_cache = {"k": ck, "v": cv, "index": idx + s}
 
     out = out.reshape(b, s, cfg.num_heads * hd)
@@ -316,12 +317,14 @@ def mlp_specs(cfg: ModelConfig, d_ff: Optional[int] = None):
 
 
 def mlp(p, x, cfg: ModelConfig, ctx: EngineContext, *, name):
-    up = ctx.linear(x, p["up"], name=f"{name}.up")
+    # linear_af fuses the dot and the activation epilogue into one Pallas
+    # pass on the kernel backend; every other backend unfuses to the same
+    # linear -> multi-AF chain as before
     if cfg.glu:
-        gate = ctx.linear(x, p["gate"], name=f"{name}.gate")
-        h = apply_af(gate, cfg.act, ctx) * up
+        up = ctx.linear(x, p["up"], name=f"{name}.up")
+        h = ctx.linear_af(x, p["gate"], af=cfg.act, name=f"{name}.gate") * up
     else:
-        h = apply_af(up, cfg.act, ctx)
+        h = ctx.linear_af(x, p["up"], af=cfg.act, name=f"{name}.up")
     return ctx.linear(h, p["down"], name=f"{name}.down")
 
 

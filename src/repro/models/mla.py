@@ -120,6 +120,21 @@ def mla_attention(p, x, cfg: ModelConfig, ctx: EngineContext, *, positions, name
         kr = jnp.repeat(k_cat, h, axis=2)
         vr = jnp.repeat(c_kv_f[:, :, None, :], h, axis=2)
         o_lat = _sdpa_flash_xla(q_cat, kr, vr, positions, k_positions, causal=True)
+    elif cache is not None and ctx.attn_impl == "decode_kernel":
+        from repro.sharding.partition import current_mesh_axes
+
+        if current_mesh_axes():
+            o_lat = _block(q_lat, q_rope, positions)  # mesh: XLA chain
+        else:
+            # Pallas cache-decode kernel (absorbed/MQA-shaped in latent
+            # space): both score terms, mask, softmax and the latent
+            # contraction happen in one VMEM-resident pass per (batch, head)
+            from repro.kernels.decode_attention import mla_decode_attention
+
+            o_lat = mla_decode_attention(
+                q_lat, q_rope.astype(jnp.float32), c_kv, k_rope, positions,
+                scale=scale,
+            )
     elif cache is None and s > Q_CHUNK and s % Q_CHUNK == 0:
         nc = s // Q_CHUNK
         ql = jnp.moveaxis(q_lat.reshape(b, nc, Q_CHUNK, h, -1), 1, 0)

@@ -9,6 +9,14 @@ exactly once and aliased into every tree. The serving loop then switches
 execution points by handing a different (already-resident) tree to the same
 jitted decode step: zero weight-side work per switch, the software analogue
 of switching modes "without hardware modification".
+
+Kernel-mode banks additionally share one *treedef* across points: the per-point
+dot parameters (CORDIC depth, quantization formats) travel as a traced int32
+params vector on each :class:`PreparedWeight` (``point`` child) rather than as
+static pytree aux data, so a mode switch also costs zero retraces/recompiles of
+the jitted burst/draft/verify programs — one compiled program serves every
+point (compile-count asserted in ``tests/test_cordic_fused.py``). carmen/int8
+points still carry static meta and re-specialize per point.
 """
 from __future__ import annotations
 

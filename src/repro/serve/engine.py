@@ -435,9 +435,11 @@ ServingShardings` bundle (``partition.serving_sharding_report`` summarizes
             sh, r = self.shardings, self.shardings.replicated
             prefill_sharding_kwargs = dict(
                 # (tree, cache, state, tokens, plen, slot, key, temp, max_new);
-                # the tree inherits its committed placement (bank points carry
-                # distinct pytree aux data, so one shardings tree cannot
-                # describe them all) — cache/state are pinned so the donated
+                # the tree inherits its committed placement: carmen/int8 bank
+                # points carry distinct pytree aux data (one shardings tree
+                # cannot describe them all), and kernel-mode points — which DO
+                # share a treedef via the traced params vector — are already
+                # placed by place_bank. cache/state are pinned so the donated
                 # carry round-trips at a fixed placement
                 in_shardings=(None, sh.cache, sh.state, r, r, r, r, r, r),
                 out_shardings=(r, r, sh.cache, sh.state),

@@ -1,0 +1,117 @@
+"""Decode-attention Pallas kernels: exchangeable with the XLA cache path.
+
+The kernels mirror the reference chains op-for-op (same mask order, same
+dtypes), but XLA does not guarantee f32 reduction order across differently
+shaped programs (the per-(b,h) kernel blocks vs the whole-batch einsum), so
+float outputs are asserted to reduction-order tolerance — a couple of ulps —
+while greedy token streams are asserted exactly. Anything beyond ulps means
+the kernel stopped computing the serving path's arithmetic.
+"""
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.core import EngineContext
+from repro.kernels.decode_attention import (
+    gqa_decode_attention,
+    mla_decode_attention,
+)
+from repro.models import get_model
+from repro.serve.engine import BatchedServer, Request
+
+EXACT = EngineContext(mode="exact", compute_dtype=jnp.float32)
+
+
+def _assert_ulp_close(out, ref):
+    """Equality up to f32 reduction-order drift (a couple of ulps)."""
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32),
+        rtol=2e-6, atol=2e-6,
+    )
+
+
+def _gqa_ref(q, ck, cv, pos, scale):
+    """models/blocks.attention cache branch, verbatim."""
+    g = q.shape[2] // ck.shape[2]
+    t = ck.shape[1]
+    valid = jnp.arange(t)[None, None, :] <= pos[:, :, None]
+    ckr = jnp.repeat(ck, g, axis=2) if g > 1 else ck
+    cvr = jnp.repeat(cv, g, axis=2) if g > 1 else cv
+    scores = jnp.einsum("bqhd,bshd->bhqs", q.astype(jnp.float32),
+                        ckr.astype(jnp.float32))
+    scores = jnp.where(valid[:, None], scores * scale, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhqs,bshd->bqhd", probs.astype(cvr.dtype), cvr)
+
+
+@pytest.mark.parametrize("cache_dtype", [jnp.float32, jnp.bfloat16],
+                         ids=["f32", "bf16"])
+@pytest.mark.parametrize("s", [1, 4], ids=["s1", "s4"])
+def test_gqa_decode_kernel_matches_chain(cache_dtype, s):
+    """Single-token decode and burst/verify blocks, GQA groups resolved by
+    index maps: matches the repeated-KV einsum chain to reduction-order ulps."""
+    rng = np.random.default_rng(0)
+    b, h, kv, hd, t = 2, 4, 2, 8, 16
+    q = jnp.asarray(rng.normal(size=(b, s, h, hd)).astype(np.float32))
+    ck = jnp.asarray(rng.normal(size=(b, t, kv, hd)).astype(np.float32)).astype(cache_dtype)
+    cv = jnp.asarray(rng.normal(size=(b, t, kv, hd)).astype(np.float32)).astype(cache_dtype)
+    pos = jnp.asarray(rng.integers(s - 1, t - s, size=(b, s)).astype(np.int32))
+    scale = 1.0 / math.sqrt(hd)
+    out = gqa_decode_attention(q, ck, cv, pos, scale=scale)
+    ref = _gqa_ref(q, ck, cv, pos, scale)
+    assert out.dtype == ref.dtype == cache_dtype
+    _assert_ulp_close(out, ref)
+
+
+def test_mla_decode_kernel_matches_chain():
+    """Absorbed-MLA (two-term scores, latent values): matches models/mla._block
+    on the cache path to reduction-order ulps."""
+    rng = np.random.default_rng(1)
+    b, s, h, r, rd, t = 2, 3, 4, 8, 4, 16
+    ql = jnp.asarray(rng.normal(size=(b, s, h, r)).astype(np.float32))
+    qr = jnp.asarray(rng.normal(size=(b, s, h, rd)).astype(np.float32))
+    ckv = jnp.asarray(rng.normal(size=(b, t, r)).astype(np.float32))
+    kr = jnp.asarray(rng.normal(size=(b, t, rd)).astype(np.float32))
+    pos = jnp.asarray(rng.integers(2, t - 1, size=(b, s)).astype(np.int32))
+    scale = 1.0 / math.sqrt(r + rd)
+
+    valid = jnp.arange(t)[None, None, :] <= pos[:, :, None]
+    scores = jnp.einsum("bqhr,btr->bhqt", ql, ckv)
+    scores = scores + jnp.einsum("bqhr,btr->bhqt", qr, kr)
+    scores = jnp.where(valid[:, None], scores * scale, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    ref = jnp.einsum("bhqt,btr->bqhr", probs, ckv)
+
+    out = mla_decode_attention(ql, qr, ckv, kr, pos, scale=scale)
+    _assert_ulp_close(out, ref)
+
+
+@pytest.mark.parametrize("arch", ["olmo-1b", "deepseek-v3-671b"])
+def test_serving_decode_kernel_stream_identical(arch):
+    """Greedy serving with attn_impl='decode_kernel' reproduces the XLA
+    cache path token for token (GQA and MLA decode dispatch); logit margins
+    agree to reduction-order ulps."""
+    cfg = reduced(get_config(arch))
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    def run(ctx):
+        rng = np.random.default_rng(0)
+        reqs = [
+            Request(i, rng.integers(0, cfg.vocab_size, 3 + i).astype(np.int32), 5)
+            for i in range(2)
+        ]
+        out = BatchedServer(model, ctx, params, slots=2, max_len=16,
+                            burst=2).run(reqs)
+        return out, [r.margins for r in reqs]
+
+    ref, ref_margins = run(EXACT)
+    got, got_margins = run(dataclasses.replace(EXACT, attn_impl="decode_kernel"))
+    assert got == ref
+    for a, b in zip(got_margins, ref_margins):
+        _assert_ulp_close(a, b)

@@ -20,10 +20,20 @@ def mesh():
     return jax.make_mesh((1, 1), ("data", "model"))
 
 
+def _pspec_entries(ps):
+    """Normalize PartitionSpec entries for version-robust comparison — jax
+    releases disagree on whether ``P(("data",), m)`` equals ``P("data", m)``."""
+    return tuple(
+        None if e is None else (e,) if isinstance(e, str) else tuple(e)
+        for e in ps
+    )
+
+
 def test_param_pspec_rules(mesh):
     spec = ParamSpec((64, 16, 128), ("embed", "heads", "head_dim"))
     ps = partition.param_pspec(spec, mesh)
-    assert ps == P(("data",), "model")  # head_dim replicated -> trailing None trimmed
+    # head_dim replicated -> trailing None trimmed
+    assert _pspec_entries(ps) == (("data",), ("model",))
 
 
 def test_param_pspec_divisibility_fallback():
