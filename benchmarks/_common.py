@@ -88,6 +88,45 @@ def timed(fn, *, warmup: int = 1):
     return time.perf_counter() - t0, out
 
 
+def attach_observer(server):
+    """Attach a metrics-only :class:`repro.obs.ServingObserver` to a server.
+
+    Trace recording stays off — benchmarks time the serving loop, and the
+    metrics half is the part whose overhead CI bounds (``bench_serving``'s
+    observability gate). Returns the observer; ``latency_block`` turns its
+    last run into the BENCH-record block.
+    """
+    from repro.obs import ServingObserver
+
+    server.observer = ServingObserver(trace=False)
+    return server.observer
+
+
+def latency_block(observer):
+    """The SLO-latency block every serving BENCH record embeds.
+
+    Percentile summaries (p50/p90/p99 from the streaming histograms) of the
+    observer's most recent run: time-to-first-token, inter-token latency,
+    queue wait, plus run throughput — latency percentiles next to tok/s, not
+    instead of it.
+    """
+    snap = observer.metrics.snapshot()
+    hists, gauges = snap["histograms"], snap["gauges"]
+
+    def pct(name):
+        h = hists.get(name)
+        if not h or not h.get("count"):
+            return None
+        return {k: round(h[k], 6) for k in ("count", "mean", "p50", "p90", "p99")}
+
+    return {
+        "ttft_s": pct("ttft_s"),
+        "intertoken_s": pct("intertoken_s"),
+        "queue_wait_s": pct("queue_wait_s"),
+        "tok_s": gauges.get("tok_s"),
+    }
+
+
 def emit_record(record, out: str):
     """Print the JSON record and (if ``out``) persist it for CI artifacts."""
     payload = json.dumps(record, indent=1)

@@ -30,9 +30,11 @@ from repro.runtime import (
 from repro.serve.engine import BatchedServer
 
 from ._common import (
+    attach_observer,
     base_record,
     bench_parser,
     emit_record,
+    latency_block,
     load_model,
     make_requests,
     timed,
@@ -56,6 +58,7 @@ def bench_load(model, cfg, params, bank, n_requests, *, slots, prompt_len,
     controller = ModeController(bank, ControllerConfig(cycle_budget=cycle_budget))
     adp_server = BatchedServer(model, ctx, params, slots=slots, max_len=max_len,
                                controller=controller)
+    obs = attach_observer(adp_server)
     adp_dt, adp_out = timed(lambda: adp_server.run(workload()))
     tele = adp_server.telemetry.summary()
 
@@ -79,6 +82,7 @@ def bench_load(model, cfg, params, bank, n_requests, *, slots, prompt_len,
         "greedy_agreement_overall": round(overall, 4),
         "greedy_agreement_high_conf": round(high_conf, 4),
         "margin_threshold": round(thr, 4),
+        "latency": latency_block(obs),
     }
 
 

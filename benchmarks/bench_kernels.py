@@ -25,9 +25,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks._common import (
+    attach_observer,
     base_record,
     bench_parser,
     emit_record,
+    latency_block,
     load_model,
     make_requests,
     timed,
@@ -38,8 +40,11 @@ from repro.serve.engine import BatchedServer
 
 
 def _serve(model, ctx, params, reqs, *, slots, max_len, burst):
+    # both contenders carry the same metrics-only observer, so the fused/
+    # unfused tok/s comparison stays fair and the record gets SLO latency
     server = BatchedServer(model, ctx, params, slots=slots, max_len=max_len,
                            burst=burst)
+    attach_observer(server)
     out = server.run(reqs)
     return out, [r.margins for r in reqs], server
 
@@ -109,7 +114,7 @@ def main(argv=None):
     for fused in ("off", "on"):
         ctx = dataclasses.replace(base, fused=fused)
         reqs = make_requests(cfg, n, prompt_len=4, max_new=max_new)
-        secs, (out, margins, _) = timed(lambda: _serve(
+        secs, (out, margins, srv) = timed(lambda: _serve(
             model, ctx, params, reqs, slots=2, max_len=max_len, burst=burst,
         ))
         tokens = sum(len(v) for v in out.values())
@@ -117,6 +122,7 @@ def main(argv=None):
             "out": out,
             "margins": margins,
             "decode_tok_s": round(tokens / secs, 2),
+            "latency": latency_block(srv.observer),
         }
 
     bit_identical = results["on"]["out"] == results["off"]["out"] and all(
@@ -135,6 +141,7 @@ def main(argv=None):
         fused_decode_tok_s=results["on"]["decode_tok_s"],
         unfused_decode_tok_s=results["off"]["decode_tok_s"],
         bit_identical=bit_identical,
+        latency=results["on"]["latency"],
         layer_kernel=_layer_microbench(cfg.d_model, cfg.d_ff,
                                        interpret_fused=None),
         mode_switch=switch,

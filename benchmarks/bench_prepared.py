@@ -16,9 +16,18 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import EngineContext, FXP8, PrecisionPolicy, prepare_params
-from repro.serve.engine import make_decode_sample_step
+from repro.serve.engine import BatchedServer, make_decode_sample_step
 
-from ._common import base_record, bench_parser, emit_record, load_model, timed
+from ._common import (
+    attach_observer,
+    base_record,
+    bench_parser,
+    emit_record,
+    latency_block,
+    load_model,
+    make_requests,
+    timed,
+)
 
 
 def bench_mode(model, params, mode: str, *, slots: int, max_len: int, steps: int):
@@ -60,6 +69,19 @@ def main(argv=None):
             model, params, mode, slots=args.slots, max_len=args.max_len,
             steps=args.steps,
         )
+
+    # one small end-to-end served run on the first mode's prepared path, so
+    # this record also carries SLO latency percentiles, not just step_ms
+    mode = args.modes.split(",")[0]
+    ctx = EngineContext(mode=mode, policy=PrecisionPolicy.accurate(FXP8),
+                        compute_dtype=jnp.float32)
+    server = BatchedServer(model, ctx, params, slots=args.slots,
+                           max_len=args.max_len)
+    obs = attach_observer(server)
+    timed(lambda: server.run(make_requests(
+        cfg, args.slots * 2, prompt_len=6,
+        max_new=min(args.steps, args.max_len - 8))))
+    record["served"] = {"mode": mode, "latency": latency_block(obs)}
     return emit_record(record, args.out)
 
 

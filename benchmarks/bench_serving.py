@@ -17,6 +17,14 @@ bursts are a pure scheduling change, so any token drift is a bug.
 slower than burst=1 (``--min-speedup``) or any config loses bit-identity —
 the CI gate that keeps the burst path honest.
 
+The ``observability`` config serves the same workload on two identical
+servers — one with a metrics-only :class:`repro.obs.ServingObserver`
+attached, one without, interleaved best-of — and records the throughput
+ratio plus the observer's SLO latency block (TTFT / inter-token / queue-wait
+percentiles). With ``--smoke`` the run exits nonzero if the observed server
+falls below ``--min-obs-ratio`` (default 0.95) of the plain one: the
+"observability costs ≤5% tok/s" gate.
+
 ``--devices 1,2,4,8`` switches to the SHARDED sweep instead: one fresh
 subprocess per host device count (XLA locks the device count at first init,
 so it cannot vary in-process), each forcing
@@ -43,9 +51,11 @@ from repro.core import EngineContext, FXP16, PrecisionPolicy
 from repro.serve.engine import BatchedServer, Request
 
 from ._common import (
+    attach_observer,
     base_record,
     bench_parser,
     emit_record,
+    latency_block,
     load_model,
     timed,
 )
@@ -232,6 +242,9 @@ def main(argv=None):
     ap.add_argument("--min-speedup", type=float, default=1.0,
                     help="CI gate: burst=8 must reach this speedup over "
                          "burst=1 (checked when 1 and 8 are both swept)")
+    ap.add_argument("--min-obs-ratio", type=float, default=0.95,
+                    help="CI gate: an attached metrics observer must keep "
+                         "this fraction of the plain server's tok/s")
     ap.add_argument("--devices", default=None,
                     help="comma-separated host device counts: run the "
                          "SHARDED sweep (mesh=None vs make_host_mesh per "
@@ -307,6 +320,7 @@ def main(argv=None):
     spec_server = BatchedServer(model, ctx, params, slots=args.slots,
                                 max_len=max_len, bank=bank,
                                 speculate=SpecConfig(draft_len=args.draft_len))
+    spec_obs = attach_observer(spec_server)
     dt, out = timed(lambda: spec_server.run(
         _workload(cfg, args.requests, max_new=args.max_new)))
     record["configs"]["speculative"] = {
@@ -315,13 +329,52 @@ def main(argv=None):
         "host_transfers": spec_server.host_transfers,
         "bit_identical": out == ref_out,
         "acceptance_rate": spec_server.spec_telemetry.summary()["acceptance_rate"],
+        "latency": latency_block(spec_obs),
+    }
+
+    # observability overhead: the same workload on two identical burst=8
+    # servers, metrics-only observer on vs off, interleaved best-of (load
+    # drift hits both equally). The observed server also supplies the
+    # record's SLO latency block — percentiles, not just tok/s.
+    plain = BatchedServer(model, ctx, params, slots=args.slots,
+                          max_len=max_len, burst=8)
+    watched = BatchedServer(model, ctx, params, slots=args.slots,
+                            max_len=max_len, burst=8)
+    obs = attach_observer(watched)
+    work = lambda: _workload(cfg, args.requests, max_new=args.max_new)
+    t_plain, out_plain = timed(lambda: plain.run(work()))
+    t_obs, out_obs = timed(lambda: watched.run(work()))
+    for _ in range(2):
+        t_plain = min(t_plain, timed(lambda: plain.run(work()), warmup=0)[0])
+        t_obs = min(t_obs, timed(lambda: watched.run(work()), warmup=0)[0])
+    tok_plain = _gen_tokens(out_plain) / max(t_plain, 1e-9)
+    tok_obs = _gen_tokens(out_obs) / max(t_obs, 1e-9)
+    record["configs"]["observability"] = {
+        "arch": "olmo-1b", "burst": 8,
+        "tok_s_plain": round(tok_plain, 1),
+        "tok_s_observed": round(tok_obs, 1),
+        "obs_ratio": round(tok_obs / max(tok_plain, 1e-9), 3),
+        "bit_identical": out_obs == out_plain,
+        "latency": latency_block(obs),
     }
 
     emit_record(record, args.out)
 
-    # CI gate: bursts must never lose tokens/sec or bit-identity
+    # CI gate: bursts must never lose tokens/sec or bit-identity, and
+    # observability must stay (near-)free
     failures = []
+    obs_rec = record["configs"]["observability"]
+    if not obs_rec["bit_identical"]:
+        failures.append("observability: token stream changed with an "
+                        "observer attached")
+    if obs_rec["obs_ratio"] < args.min_obs_ratio:
+        failures.append(
+            f"observability: observed server at {obs_rec['obs_ratio']}x of "
+            f"plain tok/s (< {args.min_obs_ratio}x)"
+        )
     for name, rec in record["configs"].items():
+        if name == "observability":
+            continue
         if "sweep" not in rec:
             if not rec["bit_identical"]:
                 failures.append(f"{name}: speculative output drifted")

@@ -33,9 +33,11 @@ from repro.serve.engine import BatchedServer
 from repro.spec import SpecConfig
 
 from ._common import (
+    attach_observer,
     base_record,
     bench_parser,
     emit_record,
+    latency_block,
     load_model,
     make_requests,
     timed,
@@ -60,6 +62,7 @@ def bench_draft_len(model, cfg, params, bank, ctx, k, ref_out, ref_dt, *,
     spec_server = BatchedServer(model, ctx, params, slots=slots,
                                 max_len=max_len, bank=bank,
                                 speculate=SpecConfig(draft_len=k))
+    obs = attach_observer(spec_server)
     spec_dt, spec_out = timed(lambda: spec_server.run(make_requests(
         cfg, requests, prompt_len=prompt_len, max_new=max_new)))
     tele = spec_server.spec_telemetry.summary()
@@ -80,6 +83,7 @@ def bench_draft_len(model, cfg, params, bank, ctx, k, ref_out, ref_dt, *,
         "accurate_only_cycles": tele["accurate_only_cycles"],
         "verify_rounds": tele["rounds"],
         "sequence_agreement": round(agree, 4),
+        "latency": latency_block(obs),
     }
 
 

@@ -19,7 +19,10 @@ sets the decode burst length (jitted scan steps per host round-trip;
 ``--burst 1`` is the per-token loop, for A/B benchmarking). ``--mesh
 DATA,MODEL`` (or ``--mesh auto``) serves tensor-parallel on a device mesh —
 greedy token streams are bit-identical to single-device serving across mesh
-shapes.
+shapes. ``--metrics``/``--metrics-out`` report per-request SLO latency
+(TTFT, inter-token, queue-wait percentiles); ``--trace-out`` /
+``--chrome-trace`` export the structured serve trace (JSONL replay format /
+Perfetto); ``--profile DIR`` additionally captures a ``jax.profiler`` trace.
 """
 from __future__ import annotations
 
@@ -105,6 +108,25 @@ def main(argv=None):
                          "mesh: 'DATA,MODEL' extents (e.g. --mesh 4,2) or "
                          "'auto' to factor the local device count (see "
                          "XLA_FLAGS=--xla_force_host_platform_device_count)")
+    obs_args = ap.add_argument_group(
+        "observability",
+        "SLO metrics + structured serve trace (repro.obs); hooks run only at "
+        "host sync points, so token streams are bit-identical with or "
+        "without them")
+    obs_args.add_argument("--metrics", action="store_true",
+                          help="print the metrics snapshot (TTFT / inter-token "
+                               "/ queue-wait percentiles, counters, gauges)")
+    obs_args.add_argument("--metrics-out", default=None, metavar="PATH",
+                          help="write the metrics + per-request snapshot JSON")
+    obs_args.add_argument("--trace-out", default=None, metavar="PATH",
+                          help="write the versioned JSONL serve trace "
+                               "(replayable: the PE-array simulator input)")
+    obs_args.add_argument("--chrome-trace", default=None, metavar="PATH",
+                          help="write a Chrome-trace JSON (load in Perfetto "
+                               "or chrome://tracing)")
+    obs_args.add_argument("--profile", default=None, metavar="DIR",
+                          help="wrap the run in a jax.profiler trace "
+                               "(XLA-level; complements the serve trace)")
     args = ap.parse_args(argv)
 
     mesh = None
@@ -184,6 +206,13 @@ def main(argv=None):
         from repro.sharding.partition import serving_sharding_report
 
         print("sharding:", json.dumps(serving_sharding_report(server.shardings)))
+    observer = None
+    want_trace = bool(args.trace_out or args.chrome_trace)
+    if args.metrics or args.metrics_out or want_trace:
+        from repro.obs import ServingObserver
+
+        observer = ServingObserver(trace=want_trace)
+        server.observer = observer
     rng = np.random.default_rng(0)
     reqs = [
         Request(
@@ -193,8 +222,15 @@ def main(argv=None):
         )
         for i in range(args.requests)
     ]
+    if args.profile:
+        jax.profiler.start_trace(args.profile)
     t0 = time.time()
-    results = server.run(reqs)
+    try:
+        results = server.run(reqs)
+    finally:
+        if args.profile:
+            jax.profiler.stop_trace()
+            print(f"jax profiler trace written to {args.profile}")
     dt = time.time() - t0
     total_tokens = sum(len(v) for v in results.values())
     weights = "adaptive" if args.adaptive else ("per-call" if args.per_call else "prepared")
@@ -207,6 +243,25 @@ def main(argv=None):
         print("telemetry:", json.dumps(server.telemetry.summary()))
     if server.spec_telemetry is not None:
         print("speculative:", json.dumps(server.spec_telemetry.summary()))
+    if observer is not None:
+        if observer.trace is not None and mesh is not None:
+            # the mesh cost block rides on the trace header: collective bytes
+            # of the compiled decode burst, next to the sharding report
+            observer.trace.attach("collectives", server.collective_snapshot())
+        if args.metrics or args.metrics_out:
+            snap = observer.snapshot()
+            if args.metrics:
+                print("metrics:", json.dumps(snap["metrics"]))
+            if args.metrics_out:
+                with open(args.metrics_out, "w") as f:
+                    json.dump(snap, f, indent=1)
+                print(f"metrics snapshot written to {args.metrics_out}")
+        if args.trace_out:
+            observer.trace.write_jsonl(args.trace_out)
+            print(f"serve trace (JSONL) written to {args.trace_out}")
+        if args.chrome_trace:
+            observer.trace.write_chrome(args.chrome_trace)
+            print(f"chrome trace written to {args.chrome_trace}")
     for rid in sorted(results):
         print(f"  req {rid}: {results[rid][:8]}...")
     return results

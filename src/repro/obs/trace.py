@@ -1,0 +1,174 @@
+"""Structured serving traces: versioned JSONL + Chrome-trace/Perfetto export.
+
+A :class:`TraceRecorder` accumulates timestamped events during one serving
+run. Events are recorded host-side at the engine's existing synchronization
+points, so tracing never changes a compiled program or adds a device
+round-trip; span durations therefore measure what the *host* observed —
+dispatch plus any device wait the call already contained. (The draft/verify
+spans inside a speculative round are dispatch-only: jax dispatch is async and
+the round synchronizes once, at its single host transfer.)
+
+Two exports from the same event list:
+
+* **JSONL** (:meth:`TraceRecorder.write_jsonl` / :func:`read_trace`): the
+  replayable serving-telemetry format. Line 1 is the header
+  (``schema``/``version``, wall-clock anchor, run metadata, optional sharding
+  report and collective-bytes snapshot); every following line is one event
+  ``{"ts": seconds-since-run-start, "ph": "B"|"E"|"I", "name": ...,
+  "track": ..., "args": {...}}``. This is the trace the ROADMAP's
+  cycle-accurate PE-array simulator replays — treat field removals as a
+  version bump.
+* **Chrome trace** (:meth:`TraceRecorder.to_chrome`): the same events as a
+  Chrome ``traceEvents`` JSON (load in Perfetto / ``chrome://tracing``).
+  Tracks map to tids — one lane per serving slot plus ``engine`` (bursts,
+  prefills, spec rounds), ``sched`` (admission), and ``run``.
+
+B/E spans must nest per track; :meth:`end` enforces it at record time so an
+exported trace is always well-formed, and :meth:`close_open` settles any
+spans left open by an aborted run.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Dict, List, Optional, Tuple
+
+__all__ = ["TRACE_SCHEMA", "TRACE_VERSION", "TraceRecorder", "read_trace"]
+
+TRACE_SCHEMA = "carmen-serve-trace"
+TRACE_VERSION = 1
+
+
+class TraceRecorder:
+    """Append-only event recorder for one serving run."""
+
+    def __init__(self, clock=time.perf_counter) -> None:
+        self._clock = clock
+        self._t0 = clock()
+        self.header: Dict = {
+            "schema": TRACE_SCHEMA,
+            "version": TRACE_VERSION,
+            "t0_unix": time.time(),
+            "meta": {},
+        }
+        self.events: List[Dict] = []
+        self._open: Dict[str, List[str]] = {}  # track -> stack of open spans
+
+    def now(self) -> float:
+        """Seconds since recorder creation (the trace time base)."""
+        return self._clock() - self._t0
+
+    def attach(self, key: str, value) -> None:
+        """Attach a header field (sharding report, collective bytes, ...)."""
+        self.header[key] = value
+
+    def _emit(self, ph: str, name: str, track: str, args: Dict,
+              ts: Optional[float] = None) -> None:
+        self.events.append({
+            "ts": self.now() if ts is None else ts,
+            "ph": ph,
+            "name": name,
+            "track": track,
+            "args": args,
+        })
+
+    def instant(self, name: str, track: str = "engine", **args) -> None:
+        self._emit("I", name, track, args)
+
+    def begin(self, name: str, track: str = "engine", **args) -> None:
+        self._open.setdefault(track, []).append(name)
+        self._emit("B", name, track, args)
+
+    def end(self, name: str, track: str = "engine", **args) -> None:
+        stack = self._open.get(track, [])
+        if not stack or stack[-1] != name:
+            raise ValueError(
+                f"trace span mismatch on track {track!r}: ending {name!r}, "
+                f"open spans are {stack}"
+            )
+        stack.pop()
+        self._emit("E", name, track, args)
+
+    def close_open(self, **args) -> None:
+        """End every open span (innermost first) — aborted-run cleanup, so
+        exports are always nesting-consistent."""
+        for track, stack in self._open.items():
+            while stack:
+                self._emit("E", stack.pop(), track, args)
+
+    # -- exports --------------------------------------------------------------
+
+    def to_chrome(self) -> Dict:
+        """Chrome trace-event JSON (open in Perfetto / chrome://tracing)."""
+        tids: Dict[str, int] = {}
+        out = []
+        for ev in self.events:
+            tid = tids.setdefault(ev["track"], len(tids))
+            out.append({
+                "name": ev["name"],
+                "ph": {"B": "B", "E": "E", "I": "i"}[ev["ph"]],
+                "ts": ev["ts"] * 1e6,  # chrome wants microseconds
+                "pid": 1,
+                "tid": tid,
+                "cat": "serving",
+                "args": ev["args"],
+            })
+        meta = [
+            {"name": "thread_name", "ph": "M", "pid": 1, "tid": tid,
+             "args": {"name": track}}
+            for track, tid in tids.items()
+        ]
+        return {
+            "traceEvents": meta + out,
+            "displayTimeUnit": "ms",
+            "metadata": self.header,
+        }
+
+    def write_chrome(self, path: str) -> str:
+        _ensure_dir(path)
+        with open(path, "w") as f:
+            json.dump(self.to_chrome(), f)
+        return path
+
+    def write_jsonl(self, path: str) -> str:
+        """The versioned replayable trace: header line, then one event/line."""
+        _ensure_dir(path)
+        with open(path, "w") as f:
+            f.write(json.dumps(self.header) + "\n")
+            for ev in self.events:
+                f.write(json.dumps(ev) + "\n")
+        return path
+
+
+def _ensure_dir(path: str) -> None:
+    d = os.path.dirname(path)
+    if d:
+        os.makedirs(d, exist_ok=True)
+
+
+def read_trace(path: str) -> Tuple[Dict, List[Dict]]:
+    """Load a JSONL trace: ``(header, events)``, schema-checked.
+
+    The reader the PE-array simulator (and tests) replay through — it
+    validates the schema name and rejects traces from a FUTURE version, so a
+    replayer never silently misreads fields it does not know.
+    """
+    with open(path) as f:
+        lines = [json.loads(l) for l in f if l.strip()]
+    if not lines:
+        raise ValueError(f"{path}: empty trace")
+    header, events = lines[0], lines[1:]
+    if header.get("schema") != TRACE_SCHEMA:
+        raise ValueError(
+            f"{path}: not a {TRACE_SCHEMA} trace (schema={header.get('schema')!r})"
+        )
+    if header.get("version", 0) > TRACE_VERSION:
+        raise ValueError(
+            f"{path}: trace version {header['version']} is newer than this "
+            f"reader ({TRACE_VERSION})"
+        )
+    for ev in events:
+        if "ts" not in ev or "ph" not in ev or "name" not in ev:
+            raise ValueError(f"{path}: malformed event {ev!r}")
+    return header, events

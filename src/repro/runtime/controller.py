@@ -73,6 +73,11 @@ class ModeController:
                 raise ValueError(f"unknown execution point {name!r}; bank has {bank.names}")
         if self.cfg.cycle_budget is not None and not 0.0 < self.cfg.cycle_budget:
             raise ValueError("cycle_budget must be positive")
+        # optional switch listener ``(old_point, new_point, signals)`` —
+        # serving observability subscribes here so every ladder move lands on
+        # the trace with the StepSignals that caused it. Survives reset()
+        # (the wiring is per server run, not per controller episode).
+        self.on_switch = None
         self.reset()
 
     def reset(self) -> None:
@@ -138,7 +143,10 @@ class ModeController:
             new_idx = min(max(self._idx + (1 if want > 0 else -1), 0),
                           len(self.bank.points) - 1)
             if new_idx != self._idx:
+                old = self.point
                 self._idx = new_idx
                 self.switches += 1
+                if self.on_switch is not None:
+                    self.on_switch(old, self.point, signals)
             self._streak = 0
         return self.point

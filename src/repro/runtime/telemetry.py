@@ -50,20 +50,45 @@ def teacher_forced_agreement(model, ctx, tree, requests, results, margins):
     ``(overall, high_confidence, threshold, n_high)`` where tokens are split
     at the median reference top-2 margin — the "matched greedy-decode
     outputs on high-confidence tokens" quantity.
+
+    Edge cases: requests that generated nothing are skipped (they carry no
+    scorable token — a run where EVERY request is empty raises, there is no
+    agreement to report); a request's margins must align one-to-one with its
+    generated tokens; and when no token clears the median threshold (only
+    possible with non-finite margins — the median of the scored margins
+    themselves always keeps at least one at/above it), the high-confidence
+    rate falls back to the overall rate with ``n_high == 0`` rather than
+    averaging an empty slice.
     """
     matches, flat = [], []
     for req in requests:
         gen = np.asarray(results[req.rid], np.int32)
+        if gen.size == 0:  # nothing generated: nothing to score
+            continue
+        req_margins = margins[req.rid]
+        if len(req_margins) != gen.size:
+            raise ValueError(
+                f"request {req.rid}: {len(req_margins)} margins for "
+                f"{gen.size} generated tokens — margins must align "
+                "one-to-one with the reference run's tokens"
+            )
         seq = np.concatenate([np.asarray(req.prompt, np.int32), gen])
         logits, _ = model.forward(tree, {"tokens": jnp.asarray(seq[None, :-1])}, ctx)
         pred = np.asarray(logits)[0].argmax(-1)
         start = len(req.prompt) - 1
         matches.extend(pred[start:start + len(gen)] == gen)
-        flat.extend(margins[req.rid])
-    matches, flat = np.asarray(matches), np.asarray(flat)
+        flat.extend(req_margins)
+    matches, flat = np.asarray(matches), np.asarray(flat, np.float64)
+    if matches.size == 0:
+        raise ValueError(
+            "teacher_forced_agreement: no generated tokens to score (every "
+            "request's generation is empty)"
+        )
     thr = float(np.median(flat))
     high = flat >= thr
-    return float(matches.mean()), float(matches[high].mean()), thr, int(high.sum())
+    overall = float(matches.mean())
+    high_conf = float(matches[high].mean()) if high.any() else overall
+    return overall, high_conf, thr, int(high.sum())
 
 
 @dataclasses.dataclass
@@ -138,6 +163,26 @@ class TelemetryRecorder:
         if self.baseline_cycles <= 0:
             return 0.0
         return 1.0 - self.est_cycles / self.baseline_cycles
+
+    def to_dict(self) -> Dict:
+        """The unified telemetry export: one shape shared with
+        :meth:`repro.spec.telemetry.SpecTelemetry.to_dict`, so an
+        adaptive+speculative run reports one coherent list of records.
+
+        Common keys: ``kind`` (discriminator), ``reference``, ``tokens``
+        (tokens charged), ``est_cycles`` / ``baseline_cycles`` (this record's
+        cycle model vs all-reference serving), ``est_cycle_savings_frac``;
+        ``detail`` carries the kind-specific ``summary()``.
+        """
+        return {
+            "kind": "adaptive",
+            "reference": self.reference,
+            "tokens": self.tokens,
+            "est_cycles": self.est_cycles,
+            "baseline_cycles": self.baseline_cycles,
+            "est_cycle_savings_frac": round(self.savings_frac(), 4),
+            "detail": self.summary(),
+        }
 
     def summary(self) -> Dict:
         tokens = max(self.tokens, 1)

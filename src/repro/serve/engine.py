@@ -50,6 +50,17 @@ paths on top:
   serving; ``self.spec_telemetry`` records acceptance and weight-pass cycle
   savings.
 
+* **observability** (``BatchedServer(observer=ServingObserver())``): per-
+  request SLO latency metrics (time-to-first-token, inter-token latency,
+  queue wait, prefill/decode wall time — streaming p50/p90/p99 histograms)
+  and a structured event trace (admission, bursts with their execution
+  point, controller switches, speculative draft/verify/rollback, compile
+  events) with Chrome-trace and replayable JSONL exports. Every hook runs
+  host-side at a sync point the loop already pays for, so the jitted
+  programs are untouched and token streams are bit-identical with the
+  observer on or off; ``snapshot()`` is the symmetric export of everything
+  ``run()`` resets on entry.
+
 * **sharded serving** (``BatchedServer(mesh=...)``): the same hot paths run
   tensor-parallel on a device mesh with no code fork. Every prepared weight
   leaf (including whole multi-point banks, alias-preserving) is placed with
@@ -357,6 +368,7 @@ ServingShardings` bundle (``partition.serving_sharding_report`` summarizes
     speculate: Optional[object] = None   # repro.spec.SpecConfig
     bank: Optional[object] = None        # repro.runtime.MultiPointBank
     mesh: Optional[object] = None        # jax.sharding.Mesh
+    observer: Optional[object] = None    # repro.obs.ServingObserver
 
     def __post_init__(self):
         if self.burst < 1:
@@ -394,6 +406,8 @@ ServingShardings` bundle (``partition.serving_sharding_report`` summarizes
         self._state = _init_slot_state(self.slots)
         self._slot_start = np.zeros((self.slots,), np.int32)  # committed KV rows
         self.host_transfers = 0
+        self._run_complete: Optional[bool] = None  # None: never ran
+        self._seen_buckets = set()  # prefill shapes already compiled
         # mesh serving: derive every placement once from the logical-axis
         # rules and commit weights / cache / slot state to the mesh. With
         # mesh=None nothing below runs — that path stays byte-identical.
@@ -473,6 +487,12 @@ ServingShardings` bundle (``partition.serving_sharding_report`` summarizes
         tree = self._serving_tree()
         seed = req.seed if req.seed is not None else req.rid
         bucket = bucket_length(len(prompt), self.max_len)
+        obs, point_name = self.observer, self._serving_point()
+        if obs is not None:
+            if bucket not in self._seen_buckets:
+                obs.compile_event("prefill", bucket=bucket)
+            obs.prefill_begin(req.rid, bucket, point_name)
+        self._seen_buckets.add(bucket)
         padded = np.zeros((1, bucket), np.int32)
         padded[0, : len(prompt)] = prompt
         with self._scope():
@@ -487,10 +507,17 @@ ServingShardings` bundle (``partition.serving_sharding_report`` summarizes
         self._slot_start[slot] = len(prompt)
         req.generated = [int(tok[0, 0])]
         req.margins = [float(margin[0])]
+        if obs is not None:
+            obs.prefill_end(req.rid, len(prompt), point_name)
         if self.telemetry is not None:
-            point = (self.spec.verify_point if self.spec is not None
-                     else self.controller.point)
-            self.telemetry.record_prefill(point, len(prompt))
+            self.telemetry.record_prefill(point_name, len(prompt))
+
+    def _serving_point(self) -> Optional[str]:
+        """Name of the execution point prefill / static decode runs at
+        (None when serving a plain prepared tree, no bank)."""
+        if self.spec is not None:
+            return self.spec.verify_point
+        return self.controller.point if self.controller is not None else None
 
     def run(self, requests: List[Request]) -> Dict[int, List[int]]:
         """Serve requests to completion; returns rid -> generated tokens.
@@ -498,7 +525,10 @@ ServingShardings` bundle (``partition.serving_sharding_report`` summarizes
         Per-token top-2 margins land on each request's ``.margins``; with a
         controller attached, ``self.telemetry`` holds the adaptive-run record.
         ``run`` is reusable: telemetry, controller state, speculative
-        counters, and the transfer count start fresh on every invocation.
+        counters, observer state, the transfer count, AND any slots stranded
+        by an aborted prior run all start fresh on every invocation
+        (``_begin_run``); ``snapshot()`` exports exactly the state one run
+        accumulated, whether it completed or died mid-flight.
         """
         for req in requests:  # reject before any state mutates
             prompt = _checked_prompt(req)
@@ -514,40 +544,144 @@ ServingShardings` bundle (``partition.serving_sharding_report`` summarizes
                     f"({req.max_new}){extra} exceeds max_len "
                     f"({self.max_len}){why}"
                 )
+        self._begin_run(requests)
+        obs = self.observer
+        aborted = True
+        try:
+            queue = list(requests)
+            results: Dict[int, List[int]] = {}
+            slot_of: Dict[int, int] = {}
+            free = list(range(self.slots))
+            while queue or self.active:
+                while queue and free:
+                    req = queue.pop(0)
+                    slot = free.pop(0)
+                    if obs is not None:
+                        obs.request_admitted(req.rid, slot)
+                    self._prefill_slot(slot, req)
+                    if len(req.generated) >= req.max_new:  # prefill already done
+                        results[req.rid] = req.generated
+                        if obs is not None:
+                            obs.request_completed(req.rid)
+                        free.append(slot)
+                        continue
+                    self.active[req.rid] = req
+                    slot_of[req.rid] = slot
+                if not self.active:
+                    continue
+                if self.spec is not None:
+                    self._spec_round(slot_of, len(queue), len(free))
+                else:
+                    self._burst_round(slot_of, len(queue), len(free))
+                done = [r for r, q in self.active.items() if len(q.generated) >= q.max_new]
+                for rid in done:
+                    req = self.active.pop(rid)
+                    results[rid] = req.generated
+                    if obs is not None:
+                        obs.request_completed(rid)
+                    free.append(slot_of.pop(rid))
+            aborted = False
+        finally:
+            self._end_run(aborted)
+        return results
+
+    # -- run lifecycle: symmetric reset / export ------------------------------
+
+    def _begin_run(self, requests: List[Request]) -> None:
+        """Reset every per-run accumulator ``snapshot()`` exports.
+
+        Slots stranded by an aborted prior run are dropped here (their device
+        rows are reclaimed by the next admission's scatter), so a failed run
+        can never leak tokens, telemetry, or transfer counts into the next
+        run's results or exported snapshots.
+        """
+        self.active.clear()
         if self.telemetry is not None:
             self.telemetry.reset()
         if self.controller is not None:
             self.controller.reset()
+            self.controller.on_switch = (
+                self.observer.controller_switch
+                if self.observer is not None else None
+            )
         if self.spec is not None:
             self.spec.reset()
+            self.spec.observer = self.observer
         self.host_transfers = 0
-        queue = list(requests)
-        results: Dict[int, List[int]] = {}
-        slot_of: Dict[int, int] = {}
-        free = list(range(self.slots))
-        while queue or self.active:
-            while queue and free:
-                req = queue.pop(0)
-                slot = free.pop(0)
-                self._prefill_slot(slot, req)
-                if len(req.generated) >= req.max_new:  # prefill already done
-                    results[req.rid] = req.generated
-                    free.append(slot)
-                    continue
-                self.active[req.rid] = req
-                slot_of[req.rid] = slot
-            if not self.active:
-                continue
-            if self.spec is not None:
-                self._spec_round(slot_of, len(queue), len(free))
-            else:
-                self._burst_round(slot_of, len(queue), len(free))
-            done = [r for r, q in self.active.items() if len(q.generated) >= q.max_new]
-            for rid in done:
-                req = self.active.pop(rid)
-                results[rid] = req.generated
-                free.append(slot_of.pop(rid))
-        return results
+        self._run_complete = False
+        if self.observer is not None:
+            self.observer.run_begin(self._run_meta(), requests)
+
+    def _end_run(self, aborted: bool) -> None:
+        self._run_complete = not aborted
+        if self.observer is not None:
+            self.observer.run_end(aborted, self.host_transfers,
+                                  self._telemetry_records())
+
+    def _run_meta(self) -> Dict:
+        """The trace-header metadata for one run (sharding report included
+        under a mesh)."""
+        meta = {
+            "family": self.model.cfg.family,
+            "mode": self.ctx.mode,
+            "slots": self.slots,
+            "burst": self.burst,
+            "max_len": self.max_len,
+            "adaptive": self.controller is not None,
+            "speculative": self.spec is not None,
+        }
+        if self.spec is not None:
+            meta["draft_len"] = self.spec.draft_len
+            meta["verify_point"] = self.spec.verify_point
+        if self.shardings is not None:
+            meta["sharding"] = partition.serving_sharding_report(self.shardings)
+        return meta
+
+    def _telemetry_records(self) -> List[Dict]:
+        """The unified telemetry records (``to_dict`` shape) this run holds."""
+        recs = []
+        if self.telemetry is not None:
+            recs.append(self.telemetry.to_dict())
+        if self.spec_telemetry is not None:
+            recs.append(self.spec_telemetry.to_dict())
+        return recs
+
+    def snapshot(self) -> Dict:
+        """Everything one ``run()`` accumulated, as one JSON-able record.
+
+        Symmetric with the reset in ``_begin_run``: the export covers exactly
+        the state since the last run started — ``completed`` is False for a
+        run that died mid-flight (and None if the server never ran), and no
+        field can carry residue from an earlier run.
+        """
+        return {
+            "completed": self._run_complete,
+            "host_transfers": self.host_transfers,
+            "telemetry": self._telemetry_records(),
+            "observability": (self.observer.snapshot()
+                              if self.observer is not None else None),
+        }
+
+    def collective_snapshot(self) -> Optional[Dict]:
+        """Collective-traffic summary of the compiled greedy decode burst —
+        the mesh-serving cost block a trace header carries. ``None`` without
+        a mesh; compiles the burst program if it has not run yet."""
+        if self.mesh is None:
+            return None
+        from repro.launch import hlo_analysis
+
+        with self._scope():
+            hlo = (
+                self.decode_burst(False)
+                .lower(self._serving_tree(), self.cache, self._state)
+                .compile()
+                .as_text()
+            )
+        costs = hlo_analysis.analyze(hlo)
+        return {
+            "collective_bytes": costs.collective_bytes,
+            "collective_by_kind": costs.collective_by_kind,
+        }
 
     def _observe(self, point, tokens, steps, queue_depth, free_slots, min_margin):
         from repro.runtime import StepSignals
@@ -600,8 +734,13 @@ ServingShardings` bundle (``partition.serving_sharding_report`` summarizes
     def _burst_round(self, slot_of, queue_depth, free_slots):
         """One decode burst over the active slots: ``burst`` scan steps on
         device, one host transfer, per-slot budget clipping on the host."""
+        obs = self.observer
         point = self.controller.point if self.controller is not None else None
         sampled = any(r.temperature > 0.0 for r in self.active.values())
+        if obs is not None:
+            if sampled not in self._burst_fns:
+                obs.compile_event("burst", sampled=sampled)
+            obs.burst_begin(point)
         with self._scope():
             self.cache, self._state, toks, margins = self.decode_burst(sampled)(
                 self._serving_tree(), self.cache, self._state,
@@ -610,14 +749,18 @@ ServingShardings` bundle (``partition.serving_sharding_report`` summarizes
         self.host_transfers += 1
         emitted = 0
         burst_margins = []
+        by_rid: Dict[int, List[int]] = {}
         for rid, req in self.active.items():
             s = slot_of[rid]
             n = min(self.burst, req.max_new - len(req.generated))
-            req.generated.extend(int(t) for t in toks[s, :n])
+            by_rid[rid] = [int(t) for t in toks[s, :n]]
+            req.generated.extend(by_rid[rid])
             req.margins.extend(float(m) for m in margins[s, :n])
             self._slot_start[s] += n
             emitted += n
             burst_margins.append(float(margins[s, :n].min()))
+        if obs is not None:
+            obs.burst_end(point, self.burst, by_rid)
         if self.controller is not None:
             self._observe(point, emitted, self.burst, queue_depth, free_slots,
                           min(burst_margins))
@@ -632,7 +775,11 @@ ServingShardings` bundle (``partition.serving_sharding_report`` summarizes
         re-synced in one fused update.
         """
         st = self._state
+        obs = self.observer
         draft_point = self.controller.point if self.controller is not None else None
+        if obs is not None:
+            obs.burst_begin(draft_point or self.spec.default_draft_point,
+                            kind="spec")
         with self._scope():
             emitted, accepted, margins, self.cache, point = self.spec.round(
                 st["tok"], self.cache, st["key"], st["count"], st["temp"],
@@ -640,11 +787,13 @@ ServingShardings` bundle (``partition.serving_sharding_report`` summarizes
             )
         self.host_transfers += 1
         accs, emits, round_margins = [], [], []
+        by_rid: Dict[int, List[int]] = {}
         sync_slots, sync_toks, sync_counts = [], [], []
         for rid, req in self.active.items():
             s = slot_of[rid]
             n = min(int(accepted[s]) + 1, req.max_new - len(req.generated))
-            req.generated.extend(int(t) for t in emitted[s, :n])
+            by_rid[rid] = [int(t) for t in emitted[s, :n]]
+            req.generated.extend(by_rid[rid])
             req.margins.extend(float(m) for m in margins[s, :n])
             self._slot_start[s] += int(accepted[s]) + 1
             accs.append(int(accepted[s]))
@@ -653,6 +802,9 @@ ServingShardings` bundle (``partition.serving_sharding_report`` summarizes
             sync_slots.append(s)
             sync_toks.append(int(emitted[s, n - 1]))
             sync_counts.append(len(req.generated))
+        if obs is not None:
+            obs.burst_end(point, self.spec.draft_len + 1, by_rid, kind="spec",
+                          accepted=accs)
         sl = jnp.asarray(sync_slots, jnp.int32)
         self._state = dict(
             st,

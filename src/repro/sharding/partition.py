@@ -170,6 +170,11 @@ class ServingShardings:
         """Sharding for a ``(slots, ...)`` emit buffer."""
         return NamedSharding(self.mesh, slot_pspec(tuple(shape), self.mesh))
 
+    def snapshot(self) -> Dict:
+        """The JSON placement summary a serving-trace header embeds
+        (:func:`serving_sharding_report`)."""
+        return serving_sharding_report(self)
+
 
 def serving_shardings(mesh: Mesh, *, params, cache, state, specs, cfg,
                       max_len: Optional[int] = None) -> ServingShardings:
@@ -209,6 +214,7 @@ def serving_sharding_report(sh: ServingShardings) -> Dict:
     n_sharded = sum(1 for l in param_leaves if tuple(l.spec))
     return {
         "mesh": {a: int(sh.mesh.shape[a]) for a in sh.mesh.axis_names},
+        "devices": int(sh.mesh.devices.size),
         "dropped": [
             {"axis": a, "dim": int(d), "mesh_axes": list(g), "extent": int(e)}
             for a, d, g, e in sh.report

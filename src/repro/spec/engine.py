@@ -74,6 +74,10 @@ class SpeculativeDecoder:
             **verify_kwargs,
         )
         self.telemetry = SpecTelemetry.for_bank(bank, self.cfg.draft_len)
+        # optional repro.obs.ServingObserver: draft/verify dispatch spans and
+        # the rollback commit land on the serving trace (the server wires
+        # this per run)
+        self.observer = None
         self._round = 0
 
     @property
@@ -99,18 +103,28 @@ class SpeculativeDecoder:
         caller records telemetry (it knows which slots are active).
         """
         point = draft_point or self.default_draft_point
+        obs = self.observer
         round_idx = jnp.int32(self._round)
         self._round += 1
         counts = jnp.asarray(counts, jnp.int32)
         temps = jnp.asarray(temps, jnp.float32)
         start = jnp.asarray(start, jnp.int32)
+        if obs is not None:
+            obs.spec_stage_begin("draft", point)
         draft_toks, draft_probs, cache = self.draft_loop(
             self.bank.tree(point), tokens, cache, base_keys, counts, temps,
             round_idx,
         )
+        if obs is not None:
+            obs.spec_stage_end("draft", point)
+            obs.spec_stage_begin("verify", self.verify_point)
         emitted, accepted, margins, cache = self.verify(
             self.bank.tree(self.verify_point), tokens, draft_toks, draft_probs,
             cache, start, base_keys, counts, temps, round_idx,
         )
+        if obs is not None:
+            obs.spec_stage_end("verify", self.verify_point)
         emitted, accepted, margins = jax.device_get((emitted, accepted, margins))
+        if obs is not None:
+            obs.spec_commit(accepted)
         return emitted, accepted, margins, cache, point

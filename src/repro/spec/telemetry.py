@@ -78,6 +78,24 @@ class SpecTelemetry:
             return 0.0
         return 1.0 - self.est_cycles / self.baseline_cycles
 
+    def to_dict(self) -> Dict:
+        """The unified telemetry export shape shared with
+        :meth:`repro.runtime.telemetry.TelemetryRecorder.to_dict` — common
+        keys (``kind``/``reference``/``tokens``/``est_cycles``/
+        ``baseline_cycles``/``est_cycle_savings_frac``) with the speculative
+        ``summary()`` under ``detail``, so adaptive and speculative records
+        from one run are consumed uniformly by the metrics registry and the
+        trace header."""
+        return {
+            "kind": "speculative",
+            "reference": self.reference,
+            "tokens": self.emitted,
+            "est_cycles": self.est_cycles,
+            "baseline_cycles": self.baseline_cycles,
+            "est_cycle_savings_frac": round(self.savings_frac(), 4),
+            "detail": self.summary(),
+        }
+
     def summary(self) -> Dict:
         return {
             "rounds": self.rounds,
