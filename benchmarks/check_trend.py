@@ -1,0 +1,155 @@
+"""Throughput-trend gate: fresh BENCH records vs the committed snapshots.
+
+CI regenerates ``artifacts/bench/BENCH_*.json`` every run; the committed
+copies are the last reviewed snapshot. This check diffs every throughput
+metric (any numeric ``tok_s``-keyed field, matched by its JSON path)
+between the fresh files on disk and the committed baseline
+(``git show <ref>:<path>``), and exits nonzero when any metric regresses
+more than ``--tolerance`` (default 10%).
+
+Raw ratios would gate on machine speed, not code: CI runners differ run to
+run. So each file's ratios are normalized by the median fresh/baseline
+ratio across ALL of that file's metrics — a uniformly slower machine moves
+every ratio equally and normalizes away, while a single config regressing
+against its siblings stands out. A file where *everything* regressed
+together is indistinguishable from a slow machine by construction; that
+case is surfaced in the report (median printed per file) but not gated.
+
+    PYTHONPATH=src python -m benchmarks.check_trend --tolerance 0.10
+
+Files missing on either side (new benchmarks, removed ones) are reported
+and skipped, not failed — the gate compares only paths present in both.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import statistics
+import subprocess
+import sys
+from typing import Dict, List, Optional, Tuple
+
+BENCH_DIR = os.path.join(os.path.dirname(__file__), "..", "artifacts", "bench")
+
+__all__ = ["collect_tok_s", "compare_records", "main"]
+
+
+def collect_tok_s(node, path: str = "") -> List[Tuple[str, float]]:
+    """Every numeric ``tok_s``-keyed metric in a JSON document, with its
+    path (``configs.dense.sweep[1].tok_s``) as the join key."""
+    out = []
+    if isinstance(node, dict):
+        for key, val in node.items():
+            sub = f"{path}.{key}" if path else key
+            if "tok_s" in key and isinstance(val, (int, float)) \
+                    and not isinstance(val, bool):
+                out.append((sub, float(val)))
+            else:
+                out.extend(collect_tok_s(val, sub))
+    elif isinstance(node, list):
+        for i, val in enumerate(node):
+            out.extend(collect_tok_s(val, f"{path}[{i}]"))
+    return out
+
+
+def compare_records(fresh: Dict, baseline: Dict, *,
+                    tolerance: float) -> Tuple[List[Dict], Optional[float]]:
+    """(regressions, median_ratio) for one fresh/baseline record pair.
+
+    Ratios are fresh/baseline per common path, normalized by their median;
+    a regression is a normalized ratio below ``1 - tolerance``.
+    """
+    fresh_m = dict(collect_tok_s(fresh))
+    base_m = dict(collect_tok_s(baseline))
+    common = [p for p in fresh_m if p in base_m and base_m[p] > 0]
+    if not common:
+        return [], None
+    ratios = {p: fresh_m[p] / base_m[p] for p in common}
+    median = statistics.median(ratios.values())
+    if median <= 0:
+        return [], median
+    regressions = []
+    for p in common:
+        normalized = ratios[p] / median
+        if normalized < 1.0 - tolerance:
+            regressions.append({
+                "path": p,
+                "fresh": fresh_m[p],
+                "baseline": base_m[p],
+                "normalized_ratio": round(normalized, 4),
+            })
+    return regressions, median
+
+
+def _baseline_json(ref: str, repo_path: str) -> Optional[Dict]:
+    """The committed copy of ``repo_path`` at ``ref`` (None if absent)."""
+    proc = subprocess.run(
+        ["git", "show", f"{ref}:{repo_path}"],
+        capture_output=True, text=True,
+        cwd=os.path.dirname(os.path.abspath(BENCH_DIR)),
+    )
+    if proc.returncode != 0:
+        return None
+    try:
+        return json.loads(proc.stdout)
+    except json.JSONDecodeError:
+        return None
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--dir", default=BENCH_DIR,
+                    help="directory holding the fresh BENCH_*.json files")
+    ap.add_argument("--baseline-ref", default="HEAD",
+                    help="git ref whose committed artifacts are the baseline")
+    ap.add_argument("--tolerance", type=float, default=0.10,
+                    help="max fractional tok/s regression after "
+                         "median-normalization")
+    args = ap.parse_args(argv)
+
+    fresh_paths = sorted(glob.glob(os.path.join(args.dir, "BENCH_*.json")))
+    if not fresh_paths:
+        print(f"check_trend: no BENCH_*.json under {args.dir}; nothing to do")
+        return
+
+    failures = []
+    for path in fresh_paths:
+        name = os.path.basename(path)
+        with open(path) as f:
+            try:
+                fresh = json.load(f)
+            except json.JSONDecodeError:
+                failures.append(f"{name}: fresh file is not valid JSON")
+                continue
+        baseline = _baseline_json(args.baseline_ref,
+                                  f"artifacts/bench/{name}")
+        if baseline is None:
+            print(f"check_trend: {name}: no committed baseline at "
+                  f"{args.baseline_ref} (new benchmark?) — skipped")
+            continue
+        regressions, median = compare_records(fresh, baseline,
+                                              tolerance=args.tolerance)
+        if median is None:
+            print(f"check_trend: {name}: no common tok_s metrics — skipped")
+            continue
+        print(f"check_trend: {name}: "
+              f"{len(dict(collect_tok_s(fresh)))} metrics, "
+              f"median fresh/baseline ratio {median:.3f}, "
+              f"{len(regressions)} regression(s)")
+        for reg in regressions:
+            failures.append(
+                f"{name}: {reg['path']} at {reg['normalized_ratio']}x of its "
+                f"siblings' trend (fresh {reg['fresh']}, committed "
+                f"{reg['baseline']}, tolerance {args.tolerance})")
+
+    if failures:
+        print("FAIL:", "; ".join(failures))
+        sys.exit(1)
+    print("check_trend: no per-config tok/s regressions beyond "
+          f"{args.tolerance:.0%}")
+
+
+if __name__ == "__main__":
+    main()

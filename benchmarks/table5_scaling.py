@@ -9,12 +9,14 @@ table in EXPERIMENTS.md.
 """
 from __future__ import annotations
 
-import time
+import math
 
 import jax
 import numpy as np
 
 from repro.core import FXP8, FXP8_UNIT, carmen_matmul_fast, full_depth
+
+from ._common import timed
 
 M, K = 4096, 512  # large enough that CPU work dominates dispatch overhead
 LANES = (64, 128, 256)
@@ -23,23 +25,22 @@ LANES = (64, 128, 256)
 def run():
     rng = np.random.default_rng(0)
     x = rng.uniform(-1, 1, (M, K)).astype(np.float32)
+    # one jitted fn reused across lane counts: each N still triggers one
+    # compile (shape specialization), but re-jitting per lane would also
+    # rebuild the trace cache and skew the first timed rep
+    f = jax.jit(lambda a, b: carmen_matmul_fast(
+        a, b, full_depth(FXP8_UNIT), FXP8, FXP8_UNIT))
     rows = []
     times = {}
     for n in LANES:
         w = rng.uniform(-1, 1, (K, n)).astype(np.float32)
-        f = jax.jit(lambda a, b: carmen_matmul_fast(a, b, full_depth(FXP8_UNIT), FXP8, FXP8_UNIT))
-        jax.block_until_ready(f(x, w))
-        t0 = time.perf_counter()
-        reps = 10
-        for _ in range(reps):
-            jax.block_until_ready(f(x, w))
-        dt = (time.perf_counter() - t0) / reps
+        timed(lambda: f(x, w))  # compile this N's specialization off-clock
+        dt = float(np.mean([timed(lambda: f(x, w), warmup=0)[0]
+                            for _ in range(10)]))
         times[n] = dt
         macs = M * K * n
         rows.append((f"table5.lanes_{n}", dt * 1e6, f"GMAC/s={macs/dt/1e9:.2f}"))
     # scaling exponent between 64 and 256 lanes (1.0 = perfectly linear)
-    import math
-
     alpha = math.log(times[256] / times[64]) / math.log(256 / 64)
     eff = (256 / 64) / (times[256] / times[64])
     rows.append(

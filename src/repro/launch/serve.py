@@ -28,6 +28,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import time
 
 import jax
@@ -88,6 +89,11 @@ def main(argv=None):
                     help="runtime-adaptive precision: multi-point bank + mode controller")
     ap.add_argument("--cycle-budget", type=float, default=0.75,
                     help="--adaptive: target MAC-cycle fraction vs all-accurate")
+    ap.add_argument("--calibration", default=None, metavar="PATH",
+                    help="PE-array calibration JSON (repro.sim.calibrate "
+                         "export): prices the bank's per-point cycle costs "
+                         "with fitted constants instead of the analytic "
+                         "model; recorded in telemetry/trace as cycle_model")
     ap.add_argument("--speculative", action="store_true",
                     help="self-speculative serving: draft on the shallow "
                          "execution point, verify on the accurate point")
@@ -167,13 +173,20 @@ def main(argv=None):
                              "bank IS the prepared path")
         from repro.runtime import ControllerConfig, ModeController, build_bank, default_points
 
+        calibration = None
+        if args.calibration:
+            from repro.sim import load_calibration
+
+            calibration = load_calibration(args.calibration)
+            print(f"cycle calibration: {calibration['id']} "
+                  f"(from {args.calibration})")
         # int8 caps at 8 effective bits: an FXP16 point would cost 1.75x
         # cycles for bit-identical arithmetic, so the ladder drops it
         hifi = None if args.mode == "int8" else FXP16
         bank = build_bank(
             params, args.mode,
             default_points(fmt, base_policy=policy, hifi_fmt=hifi),
-            specs=model.specs(), mesh=mesh,
+            specs=model.specs(), mesh=mesh, calibration=calibration,
         )
         print(f"bank: points={bank.names} shared_leaves={bank.shared_leaves}/"
               f"{bank.unique_leaves} rel_cycles="
@@ -248,6 +261,9 @@ def main(argv=None):
             # the mesh cost block rides on the trace header: collective bytes
             # of the compiled decode burst, next to the sharding report
             observer.trace.attach("collectives", server.collective_snapshot())
+        for out in (args.metrics_out, args.trace_out, args.chrome_trace):
+            if out and os.path.dirname(out):
+                os.makedirs(os.path.dirname(out), exist_ok=True)
         if args.metrics or args.metrics_out:
             snap = observer.snapshot()
             if args.metrics:

@@ -23,7 +23,8 @@ observer attached falls below 95% of uninstrumented tok/s.
 """
 from .metrics import Counter, Gauge, MetricsRegistry, StreamingHistogram
 from .observer import ServingObserver
-from .trace import TRACE_SCHEMA, TRACE_VERSION, TraceRecorder, read_trace
+from .trace import (TRACE_SCHEMA, TRACE_VERSION, TraceReader, TraceRecorder,
+                    iter_trace, read_trace)
 
 __all__ = [
     "Counter",
@@ -31,8 +32,10 @@ __all__ = [
     "MetricsRegistry",
     "ServingObserver",
     "StreamingHistogram",
+    "TraceReader",
     "TraceRecorder",
     "TRACE_SCHEMA",
     "TRACE_VERSION",
+    "iter_trace",
     "read_trace",
 ]

@@ -34,7 +34,8 @@ import os
 import time
 from typing import Dict, List, Optional, Tuple
 
-__all__ = ["TRACE_SCHEMA", "TRACE_VERSION", "TraceRecorder", "read_trace"]
+__all__ = ["TRACE_SCHEMA", "TRACE_VERSION", "TraceRecorder", "iter_trace",
+           "read_trace"]
 
 TRACE_SCHEMA = "carmen-serve-trace"
 TRACE_VERSION = 1
@@ -147,18 +148,7 @@ def _ensure_dir(path: str) -> None:
         os.makedirs(d, exist_ok=True)
 
 
-def read_trace(path: str) -> Tuple[Dict, List[Dict]]:
-    """Load a JSONL trace: ``(header, events)``, schema-checked.
-
-    The reader the PE-array simulator (and tests) replay through — it
-    validates the schema name and rejects traces from a FUTURE version, so a
-    replayer never silently misreads fields it does not know.
-    """
-    with open(path) as f:
-        lines = [json.loads(l) for l in f if l.strip()]
-    if not lines:
-        raise ValueError(f"{path}: empty trace")
-    header, events = lines[0], lines[1:]
+def _checked_header(path: str, header: Dict) -> Dict:
     if header.get("schema") != TRACE_SCHEMA:
         raise ValueError(
             f"{path}: not a {TRACE_SCHEMA} trace (schema={header.get('schema')!r})"
@@ -168,7 +158,72 @@ def read_trace(path: str) -> Tuple[Dict, List[Dict]]:
             f"{path}: trace version {header['version']} is newer than this "
             f"reader ({TRACE_VERSION})"
         )
-    for ev in events:
-        if "ts" not in ev or "ph" not in ev or "name" not in ev:
-            raise ValueError(f"{path}: malformed event {ev!r}")
-    return header, events
+    return header
+
+
+class TraceReader:
+    """Streaming JSONL trace reader: header eagerly, events lazily.
+
+    The header line is read and schema-checked at construction; iterating
+    yields one validated event dict per JSONL line without ever holding the
+    whole file — a multi-hundred-MB serving trace replays in O(1) memory.
+    Single-pass: iterate once (the PE-array simulator's replay is a single
+    forward sweep by design).
+    """
+
+    def __init__(self, path: str) -> None:
+        self.path = path
+        self._f = open(path)
+        first = self._f.readline()
+        if not first.strip():
+            self._f.close()
+            raise ValueError(f"{path}: empty trace")
+        self.header: Dict = _checked_header(path, json.loads(first))
+
+    def __iter__(self):
+        return self
+
+    def __next__(self) -> Dict:
+        for line in self._f:
+            if not line.strip():
+                continue
+            ev = json.loads(line)
+            if "ts" not in ev or "ph" not in ev or "name" not in ev:
+                self._f.close()
+                raise ValueError(f"{self.path}: malformed event {ev!r}")
+            return ev
+        self._f.close()
+        raise StopIteration
+
+    def close(self) -> None:
+        self._f.close()
+
+    def __enter__(self) -> "TraceReader":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+def iter_trace(path: str) -> TraceReader:
+    """Open a JSONL trace for streaming replay.
+
+    Returns a :class:`TraceReader`: ``reader.header`` is the schema-checked
+    header (validated before the first event is touched, same checks as
+    :func:`read_trace`), and iterating the reader yields events one line at a
+    time. Use as an iterator or a context manager::
+
+        with iter_trace(path) as tr:
+            for ev in tr: ...
+    """
+    return TraceReader(path)
+
+
+def read_trace(path: str) -> Tuple[Dict, List[Dict]]:
+    """Load a JSONL trace fully: ``(header, events)``, schema-checked.
+
+    Thin wrapper over :func:`iter_trace` that materializes the event list —
+    convenient for tests and small traces; the simulator streams instead.
+    """
+    with iter_trace(path) as tr:
+        return tr.header, list(tr)

@@ -29,7 +29,7 @@ from repro.core.backends import PreparedWeight, prepare_params
 from repro.core.fxp import FXP8, FXP16, FxPFormat
 from repro.core.precision_policy import PrecisionPolicy, pin_critical
 
-from .telemetry import estimate_point_cycles
+from .telemetry import calibration_id, estimate_point_cycles
 
 __all__ = ["ExecutionPoint", "MultiPointBank", "build_bank", "default_points",
            "place_bank"]
@@ -78,8 +78,10 @@ class MultiPointBank:
     ``cycles_per_token`` is the estimated engine MAC cycles one decoded token
     costs at each point (iterative-PE model, see ``runtime.telemetry``);
     ``reference`` names the all-accurate baseline that savings are quoted
-    against. ``shared_leaves`` counts prepared leaves aliased between at
-    least two points (the zero-copy pinning guarantee, test-asserted).
+    against, and ``cycle_model`` names the calibration (or ``"analytic"``)
+    those cycles were computed with. ``shared_leaves`` counts prepared leaves
+    aliased between at least two points (the zero-copy pinning guarantee,
+    test-asserted).
     """
 
     mode: str
@@ -89,6 +91,7 @@ class MultiPointBank:
     reference: str
     shared_leaves: int = 0
     unique_leaves: int = 0
+    cycle_model: str = "analytic"
 
     @property
     def names(self) -> Tuple[str, ...]:
@@ -152,6 +155,7 @@ def build_bank(
     specs=None,
     reference: Optional[str] = None,
     mesh=None,
+    calibration: Optional[Dict] = None,
 ) -> MultiPointBank:
     """Materialize the multi-point weight bank (one prepare pass, shared memo).
 
@@ -164,6 +168,11 @@ def build_bank(
     (:func:`place_bank`) — sharded serving hands the jitted decode step
     device-resident tensor-parallel trees, still zero weight-side work per
     switch.
+
+    ``calibration`` (a ``repro.sim.calibrate`` export) refines the per-point
+    cycle estimates, so the ModeController's budget and the PE-array
+    simulator optimize the same cost; ``bank.cycle_model`` records which
+    model produced the estimates.
     """
     if mode == "exact":
         raise ValueError(
@@ -177,7 +186,9 @@ def build_bank(
         raise ValueError("execution point names must be unique")
 
     cycles = {
-        p.name: estimate_point_cycles(params, p.policy, specs=specs) for p in points
+        p.name: estimate_point_cycles(params, p.policy, specs=specs,
+                                      calibration=calibration)
+        for p in points
     }
     points = tuple(sorted(points, key=lambda p: cycles[p.name]))
     if reference is None:
@@ -202,6 +213,7 @@ def build_bank(
         reference=reference,
         shared_leaves=len(shared),
         unique_leaves=len(all_ids),
+        cycle_model=calibration_id(calibration),
     )
     if mesh is not None:
         place_bank(bank, mesh, specs)

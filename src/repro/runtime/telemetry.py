@@ -7,11 +7,21 @@ per token pushed through it. :func:`estimate_point_cycles` folds that over
 every engine-routed weight at a policy's per-layer depths — the quantity the
 paper's 33%-cycle-reduction claim is stated in, and the one the mode
 controller budgets against.
+
+The analytic constants can be refined by a ``repro.sim.calibrate`` export:
+:func:`estimate_point_cycles` accepts the calibration dict and folds its
+``mac_overhead`` (extra cycles per MAC beyond the depth+1 pipeline) into the
+per-leaf charge, and every telemetry record names which calibration (or
+``"analytic"``) produced its ``est_cycles`` so records stay comparable
+across runs. The calibrated model is a per-MAC affine refinement of the
+analytic one, so relative point costs — the only thing the ModeController's
+ladder ordering and hysteresis consume — are perturbed but never reordered
+for sane overheads (test-asserted bit-identity for pinned controllers).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional
+from typing import Dict, List, Optional
 
 import jax.numpy as jnp
 import numpy as np
@@ -19,26 +29,78 @@ import numpy as np
 from repro.core.backends import iter_dot_weights
 from repro.core.precision_policy import PrecisionPolicy
 
-__all__ = ["TelemetryRecorder", "estimate_point_cycles", "teacher_forced_agreement"]
+__all__ = ["TelemetryRecorder", "calibration_id", "estimate_point_cycles",
+           "layer_cost_table", "teacher_forced_agreement"]
 
 
-def estimate_point_cycles(params, policy: PrecisionPolicy, *, specs=None) -> float:
+def calibration_id(calibration: Optional[Dict]) -> str:
+    """The provenance tag a telemetry record carries for its cycle model."""
+    if calibration is None:
+        return "analytic"
+    return str(calibration.get("id", "calibrated"))
+
+
+def _mac_overhead(calibration: Optional[Dict]) -> float:
+    if calibration is None:
+        return 0.0
+    return float(calibration.get("constants", {}).get("mac_overhead", 0.0))
+
+
+def _iter_costed_weights(params, *, specs=None):
+    """Yield ``(name, shape)`` for every engine-routed weight the cycle model
+    charges: the ``iter_dot_weights`` leaves plus the tied-embedding lm_head
+    (raw trees don't materialize it; the engine still pays its dot)."""
+    for _, name, leaf, _, _ in iter_dot_weights(params, specs=specs):
+        yield name, tuple(int(s) for s in leaf.shape)
+    if isinstance(params, dict) and "lm_head" not in params and "embed" in params:
+        embed = params["embed"]
+        if hasattr(embed, "shape") and getattr(embed, "ndim", 0) == 2:
+            v, d = (int(s) for s in embed.shape)
+            yield "lm_head", (d, v)
+
+
+def estimate_point_cycles(params, policy: PrecisionPolicy, *, specs=None,
+                          calibration: Optional[Dict] = None) -> float:
     """Estimated engine MAC cycles per decoded token under ``policy``.
 
     Walks the same leaves ``prepare_params`` formats (plus the tied-embedding
     lm_head) and charges numel * (depth + 1) per leaf — the iterative-PE
     cycle model. Works on raw or prepared trees (both expose ``.shape``).
+
+    ``calibration`` (a ``repro.sim.calibrate`` export) refines the constant:
+    the charge becomes numel * (mac_overhead + depth + 1), where
+    ``mac_overhead`` is the fitted per-MAC pipeline overhead. With
+    ``calibration=None`` the analytic model (overhead 0) is unchanged.
     """
+    overhead = _mac_overhead(calibration)
     total = 0.0
-    for _, name, leaf, _, _ in iter_dot_weights(params, specs=specs):
+    for name, shape in _iter_costed_weights(params, specs=specs):
         depth = policy.for_layer(name).depth
-        total += float(np.prod(leaf.shape)) * (depth + 1)
-    if isinstance(params, dict) and "lm_head" not in params and "embed" in params:
-        embed = params["embed"]
-        if hasattr(embed, "shape") and getattr(embed, "ndim", 0) == 2:
-            depth = policy.for_layer("lm_head").depth
-            total += float(np.prod(embed.shape)) * (depth + 1)
+        total += float(np.prod(shape)) * (overhead + depth + 1)
     return total
+
+
+def layer_cost_table(params, policies: Dict[str, PrecisionPolicy], *,
+                     specs=None) -> List[Dict]:
+    """Per-weight cost table for the trace header's ``engine`` block.
+
+    One JSON-able row per engine-routed weight leaf: its policy-resolution
+    name, shape, and the (depth, format bits) each execution point runs it
+    at. This is what makes a serving trace self-contained for the PE-array
+    simulator — replay needs no model reconstruction, just this table.
+    """
+    rows = []
+    for name, shape in _iter_costed_weights(params, specs=specs):
+        rows.append({
+            "layer": name,
+            "shape": list(shape),
+            "points": {
+                pname: {"depth": int(pol.for_layer(name).depth),
+                        "bits": int(pol.for_layer(name).fmt.bits)}
+                for pname, pol in policies.items()
+            },
+        })
+    return rows
 
 
 def teacher_forced_agreement(model, ctx, tree, requests, results, margins):
@@ -109,13 +171,15 @@ class TelemetryRecorder:
 
     cycles_per_token: Dict[str, float]
     reference: str
+    cycle_model: str = "analytic"  # which calibration produced est_cycles
 
     def __post_init__(self):
         self.reset()
 
     @classmethod
     def for_bank(cls, bank) -> "TelemetryRecorder":
-        return cls(dict(bank.cycles_per_token), bank.reference)
+        return cls(dict(bank.cycles_per_token), bank.reference,
+                   getattr(bank, "cycle_model", "analytic"))
 
     def reset(self) -> None:
         self.steps = 0  # observations: bursts, classic steps, spec rounds
@@ -171,16 +235,22 @@ class TelemetryRecorder:
 
         Common keys: ``kind`` (discriminator), ``reference``, ``tokens``
         (tokens charged), ``est_cycles`` / ``baseline_cycles`` (this record's
-        cycle model vs all-reference serving), ``est_cycle_savings_frac``;
-        ``detail`` carries the kind-specific ``summary()``.
+        cycle model vs all-reference serving), ``est_cycle_savings_frac``,
+        ``cycle_model`` (which calibration — or ``"analytic"`` — produced the
+        cycle numbers, so records are comparable across runs); ``detail``
+        carries the kind-specific ``summary()``.
         """
         return {
             "kind": "adaptive",
+            "cycle_model": self.cycle_model,
             "reference": self.reference,
             "tokens": self.tokens,
             "est_cycles": self.est_cycles,
             "baseline_cycles": self.baseline_cycles,
-            "est_cycle_savings_frac": round(self.savings_frac(), 4),
+            # full precision: this is the machine-readable record the
+            # simulator's predicted-vs-reported gate compares against
+            # (summary() rounds for humans)
+            "est_cycle_savings_frac": self.savings_frac(),
             "detail": self.summary(),
         }
 

@@ -635,7 +635,46 @@ ServingShardings` bundle (``partition.serving_sharding_report`` summarizes
             meta["verify_point"] = self.spec.verify_point
         if self.shardings is not None:
             meta["sharding"] = partition.serving_sharding_report(self.shardings)
+        engine = self._engine_cost_meta()
+        if engine is not None:
+            meta["engine"] = engine
         return meta
+
+    def _engine_cost_meta(self) -> Optional[Dict]:
+        """The trace header's ``engine`` block: per-point cycle estimates plus
+        the per-weight (shape, depth, bits) table — everything the PE-array
+        simulator needs to replay this trace without reconstructing the
+        model. ``None`` for exact-mode serving (no precision knob, nothing to
+        attribute cycles to). Computed once per server (the bank and policy
+        are fixed at construction)."""
+        if not hasattr(self, "_engine_meta_cache"):
+            from repro.runtime.telemetry import (estimate_point_cycles,
+                                                 layer_cost_table)
+
+            specs = self.model.specs()
+            if self._bank is not None:
+                bank = self._bank
+                policies = {p.name: p.policy for p in bank.points}
+                self._engine_meta_cache = {
+                    "points": {n: bank.cycles_per_token[n] for n in bank.names},
+                    "reference": bank.reference,
+                    "cycle_model": getattr(bank, "cycle_model", "analytic"),
+                    "layers": layer_cost_table(bank.tree(bank.reference),
+                                               policies, specs=specs),
+                }
+            elif self.ctx.mode != "exact" and self.ctx.policy is not None:
+                # static prepared serving: a single-point "bank"
+                self._engine_meta_cache = {
+                    "points": {"static": estimate_point_cycles(
+                        self.params, self.ctx.policy, specs=specs)},
+                    "reference": "static",
+                    "cycle_model": "analytic",
+                    "layers": layer_cost_table(
+                        self.params, {"static": self.ctx.policy}, specs=specs),
+                }
+            else:
+                self._engine_meta_cache = None
+        return self._engine_meta_cache
 
     def _telemetry_records(self) -> List[Dict]:
         """The unified telemetry records (``to_dict`` shape) this run holds."""

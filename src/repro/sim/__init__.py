@@ -1,0 +1,43 @@
+"""Trace-driven cycle-accurate simulator of the paper's CARMEN PE array.
+
+The repo's cycle numbers — ``estimate_point_cycles``' analytic K*(depth+1)
+model, every ``est_cycle_savings_frac`` the serving loop reports — are made
+auditable here, by replaying real serving traces through an explicit model
+of the paper's hardware and comparing predictions against measurements:
+
+* :mod:`repro.sim.array` — the array model: N iterative CORDIC PEs (default
+  256, 64-PE variant for Table 5), per-MAC latency as a function of depth
+  and format, time-multiplexed AF-block contention, weight-stream bandwidth,
+  and mode-switch overhead. Pure cycle arithmetic, no jax.
+* :mod:`repro.sim.replay` — consumes a ``carmen-serve-trace`` JSONL
+  (streaming, via :func:`repro.obs.iter_trace`) and schedules every burst
+  span, speculative draft/verify round, prefill bucket, and controller
+  switch onto the array: per-layer / per-request / per-phase cycle and
+  utilization attribution. CLI: ``python -m repro.sim.replay trace.jsonl``.
+* :mod:`repro.sim.analyze` — the report layer: JSON + human-readable table
+  of where cycles go, PE occupancy, AF stalls, and predicted-vs-measured
+  comparisons (wall-clock ordering, savings fraction).
+* :mod:`repro.sim.calibrate` — fits the model's per-stage constants against
+  the Tables 2/3/5 benchmark measurements and exports a calibration JSON
+  that ``estimate_point_cycles`` / ``build_bank`` load, so the
+  ModeController's budget and the simulator optimize the same cost.
+
+``benchmarks/bench_sim.py`` turns predicted-vs-measured drift into a CI
+gate.
+"""
+from .array import ArrayConfig, CostBreakdown, dot_pass_cost
+from .calibrate import (fit_calibration, load_calibration, run_calibration,
+                        save_calibration)
+from .replay import ReplayResult, replay_trace
+
+__all__ = [
+    "ArrayConfig",
+    "CostBreakdown",
+    "ReplayResult",
+    "dot_pass_cost",
+    "fit_calibration",
+    "load_calibration",
+    "replay_trace",
+    "run_calibration",
+    "save_calibration",
+]

@@ -1,0 +1,246 @@
+"""Fit the PE-array model's constants against the Tables 2/3/5 measurements.
+
+The analytic cycle model (``mac_cycles``: one CORDIC iteration per cycle)
+has shape but no units. Calibration pins both against what this machine
+actually measures, using the same measurement protocol as
+``benchmarks/table2_mac.py`` / ``table3_af.py`` / ``table5_scaling.py``:
+
+* **sec_per_cycle** — the wall seconds one MAC iteration costs, the slope of
+  bit-faithful ``cordic_matmul`` time over depth (Table 2 protocol: the
+  bit-faithful path's wall time is genuinely proportional to depth — it
+  executes the iteration loop — unlike the fast error-model, whose matmul
+  time is depth-independent).
+* **mac_overhead** — extra cycles per MAC beyond depth+1, from the fit's
+  intercept above the dispatch floor. Clamped to [0, 1]: the +1 in the
+  analytic model already covers the accumulate, so anything above one more
+  cycle/MAC is dispatch noise, not pipeline structure.
+* **af_iter_cycles** — Table 3 protocol: AF-block wall time per element per
+  CORDIC iteration over the fitted sec_per_cycle. Fitted *per iteration*
+  (not per element) because the AF block is CORDIC-iterative like the PEs:
+  keeping AF cost on the same depth ladder preserves per-point cost ratios,
+  so calibrating never distorts the savings fractions the gates check.
+* **parallel_overhead_exp** — Table 5 protocol: the measured time exponent
+  across PE-lane counts (0 = perfect scaling; the paper claims near-linear
+  throughput, i.e. exponent ≈ 0).
+* **host_sync_cycles** — the dispatch floor (jitted exact-dot wall time) in
+  cycles: what the array idles per host round-trip, the term that makes
+  burst=1 serving predictably slower than burst=8.
+
+:func:`fit_calibration` is pure (measurements in, calibration out) so tests
+fit synthetic measurements with known constants; :func:`run_calibration`
+measures then fits. The export round-trips through JSON into
+``estimate_point_cycles(calibration=...)`` / ``build_bank(calibration=...)``
+so the ModeController and the simulator optimize the same cost.
+"""
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import math
+import os
+import time
+from typing import Dict, Optional
+
+import numpy as np
+
+CALIBRATION_SCHEMA = "carmen-sim-calibration"
+CALIBRATION_VERSION = 1
+
+__all__ = ["CALIBRATION_SCHEMA", "CALIBRATION_VERSION", "fit_calibration",
+           "load_calibration", "measure", "run_calibration",
+           "save_calibration"]
+
+
+# -- measurement (Tables 2/3/5 protocol, locally sized) -----------------------
+
+def _timed(fn, reps: int) -> float:
+    import jax
+
+    jax.block_until_ready(fn())  # compile/warm
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn())
+    return (time.perf_counter() - t0) / reps
+
+
+def measure(*, smoke: bool = False) -> Dict:
+    """Run the calibration measurements on this machine.
+
+    Mirrors the benchmark protocols at locally-chosen sizes (``smoke``
+    shrinks shapes and rep counts for CI). Returns the measurement dict
+    :func:`fit_calibration` consumes.
+    """
+    import jax
+
+    from repro.core import (FXP8, FXP8_UNIT, AF_NAMES, carmen_matmul_fast,
+                            cordic_matmul, full_depth, multi_af_float,
+                            quantize)
+
+    rng = np.random.default_rng(0)
+    reps = 2 if smoke else 5
+
+    # Table 2: bit-faithful MAC time vs depth (the slope is sec/iteration)
+    m, k, n = (32, 128, 32) if smoke else (64, 256, 64)
+    x = rng.uniform(-1, 1, (m, k)).astype(np.float32)
+    w = rng.uniform(-1, 1, (k, n)).astype(np.float32)
+    xq, wq = quantize(x, FXP8), quantize(w, FXP8_UNIT)
+    depths = (2, full_depth(FXP8_UNIT)) if smoke else (2, 4, full_depth(FXP8_UNIT))
+    mac = {}
+    for d in depths:
+        f = jax.jit(lambda a, b, d=d: cordic_matmul(a, b, d, FXP8_UNIT))
+        mac[int(d)] = _timed(lambda: f(xq, wq), reps)
+
+    # dispatch floor: a jitted exact dot on the same shape
+    g = jax.jit(lambda a, b: a @ b)
+    dispatch_s = _timed(lambda: g(x, w), reps)
+
+    # Table 3: AF-block time per element
+    af_shape = (32, 256) if smoke else (64, 512)
+    xa = rng.uniform(-1, 1, af_shape).astype(np.float32)
+    af_depth = full_depth(FXP8)
+    modes = AF_NAMES[:2] if smoke else AF_NAMES
+    af = {}
+    for mode in modes:
+        f = jax.jit(lambda mm=mode: multi_af_float(xa, mm, af_depth, FXP8))
+        af[mode] = _timed(f, reps)
+
+    # Table 5: PE-lane scaling (fast model, fixed K and token count)
+    lm, lk = (1024, 256) if smoke else (4096, 512)
+    xl = rng.uniform(-1, 1, (lm, lk)).astype(np.float32)
+    fl = jax.jit(lambda a, b: carmen_matmul_fast(
+        a, b, full_depth(FXP8_UNIT), FXP8, FXP8_UNIT))
+    lanes = {}
+    for nl in (64, 256):
+        wl = rng.uniform(-1, 1, (lk, nl)).astype(np.float32)
+        lanes[int(nl)] = _timed(lambda: fl(xl, wl), reps)
+
+    return {
+        "mac": {"shape": [m, k, n], "times_by_depth": mac},
+        "dispatch_s": dispatch_s,
+        "af": {"shape": list(af_shape), "depth": af_depth,
+               "n_elems": int(np.prod(af_shape)), "times_by_mode": af},
+        "lanes": {"shape": [lm, lk], "times_by_n": lanes},
+        "smoke": smoke,
+    }
+
+
+# -- fitting ------------------------------------------------------------------
+
+def fit_calibration(measurements: Dict) -> Dict:
+    """Fit array constants from a :func:`measure` dict (pure; testable with
+    synthetic measurements). Every constant is clamped to its documented
+    sane range — a noisy machine degrades toward the analytic model instead
+    of producing a pathological one."""
+    mac = measurements["mac"]
+    m, k, n = mac["shape"]
+    macs = float(m) * k * n
+    pts = sorted((int(d), float(t)) for d, t in mac["times_by_depth"].items())
+    if len(pts) < 2:
+        raise ValueError("calibration needs bit-faithful timings at >= 2 depths")
+    xs = np.array([d + 1 for d, _ in pts], np.float64)
+    ys = np.array([t for _, t in pts], np.float64)
+    slope, intercept = np.polyfit(xs, ys, 1)
+    fallback = slope <= 0  # depth signal lost in noise: degrade gracefully
+    if fallback:
+        slope = float(ys.max() / (macs * xs.max()))
+        intercept = 0.0
+    sec_per_iter = float(slope) / macs  # seconds per MAC iteration
+    resid = float(np.max(np.abs(np.polyval([slope, intercept], xs) - ys))
+                  / ys.max())
+
+    dispatch_s = float(measurements.get("dispatch_s", 0.0))
+    mac_overhead = 0.0
+    if not fallback and macs * sec_per_iter > 0:
+        mac_overhead = (float(intercept) - dispatch_s) / (macs * sec_per_iter)
+    mac_overhead = float(np.clip(mac_overhead, 0.0, 1.0))
+
+    af = measurements.get("af")
+    af_iter = 1.0
+    if af and af.get("times_by_mode"):
+        per_elem = [max(float(t) - dispatch_s, 0.0) / af["n_elems"]
+                    for t in af["times_by_mode"].values()]
+        iters = float(af.get("depth", 7)) + 1.0
+        af_iter = float(np.clip(
+            np.mean(per_elem) / (sec_per_iter * iters), 0.25, 8.0))
+
+    lanes = measurements.get("lanes", {}).get("times_by_n", {})
+    exp = 0.0
+    if len(lanes) >= 2:
+        ns = sorted(int(x) for x in lanes)
+        lo, hi = ns[0], ns[-1]
+        exp = math.log(float(lanes[hi]) / float(lanes[lo])) / math.log(hi / lo)
+        exp = float(np.clip(exp, 0.0, 1.5))
+
+    constants = {
+        "sec_per_cycle": sec_per_iter,
+        "mac_overhead": mac_overhead,
+        "af_iter_cycles": af_iter,
+        "parallel_overhead_exp": exp,
+        "host_sync_cycles": max(dispatch_s, 0.0) / sec_per_iter,
+    }
+    digest = hashlib.sha256(
+        json.dumps({kk: (round(v, 12) if isinstance(v, float) else v)
+                    for kk, v in constants.items()},
+                   sort_keys=True).encode()).hexdigest()[:8]
+    return {
+        "schema": CALIBRATION_SCHEMA,
+        "version": CALIBRATION_VERSION,
+        "id": f"calib-{digest}",
+        "constants": constants,
+        "fit": {
+            "mac_fit_max_rel_resid": resid,
+            "mac_slope_fallback": bool(fallback),
+            "measured_scaling_exponent": exp,
+        },
+        "source": measurements,
+    }
+
+
+def run_calibration(*, smoke: bool = False) -> Dict:
+    """Measure this machine and fit: the one-call calibration entry point."""
+    return fit_calibration(measure(smoke=smoke))
+
+
+# -- persistence --------------------------------------------------------------
+
+def save_calibration(calibration: Dict, path: str) -> str:
+    d = os.path.dirname(path)
+    if d:
+        os.makedirs(d, exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(calibration, f, indent=2)
+    return path
+
+
+def load_calibration(path: str) -> Dict:
+    with open(path) as f:
+        calibration = json.load(f)
+    if calibration.get("schema") != CALIBRATION_SCHEMA:
+        raise ValueError(
+            f"{path}: not a {CALIBRATION_SCHEMA} export "
+            f"(schema={calibration.get('schema')!r})")
+    if calibration.get("version", 0) > CALIBRATION_VERSION:
+        raise ValueError(
+            f"{path}: calibration version {calibration['version']} is newer "
+            f"than this reader ({CALIBRATION_VERSION})")
+    return calibration
+
+
+def main(argv: Optional[list] = None) -> None:
+    ap = argparse.ArgumentParser(
+        description="Fit PE-array calibration from local measurements")
+    ap.add_argument("--out", default="artifacts/sim/calibration.json")
+    ap.add_argument("--smoke", action="store_true",
+                    help="small shapes / few reps (CI)")
+    args = ap.parse_args(argv)
+    calibration = run_calibration(smoke=args.smoke)
+    save_calibration(calibration, args.out)
+    print(json.dumps({"id": calibration["id"],
+                      "constants": calibration["constants"],
+                      "fit": calibration["fit"],
+                      "out": args.out}, indent=2))
+
+
+if __name__ == "__main__":
+    main()

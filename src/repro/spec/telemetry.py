@@ -29,13 +29,15 @@ class SpecTelemetry:
     cycles_per_token: Dict[str, float]
     reference: str
     draft_len: int
+    cycle_model: str = "analytic"  # which calibration produced est_cycles
 
     def __post_init__(self):
         self.reset()
 
     @classmethod
     def for_bank(cls, bank, draft_len: int) -> "SpecTelemetry":
-        return cls(dict(bank.cycles_per_token), bank.reference, draft_len)
+        return cls(dict(bank.cycles_per_token), bank.reference, draft_len,
+                   getattr(bank, "cycle_model", "analytic"))
 
     def reset(self) -> None:
         self.rounds = 0
@@ -88,11 +90,14 @@ class SpecTelemetry:
         trace header."""
         return {
             "kind": "speculative",
+            "cycle_model": self.cycle_model,
             "reference": self.reference,
             "tokens": self.emitted,
             "est_cycles": self.est_cycles,
             "baseline_cycles": self.baseline_cycles,
-            "est_cycle_savings_frac": round(self.savings_frac(), 4),
+            # full precision, like TelemetryRecorder.to_dict: the replay
+            # gate compares against this value (summary() rounds for humans)
+            "est_cycle_savings_frac": self.savings_frac(),
             "detail": self.summary(),
         }
 

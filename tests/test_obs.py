@@ -12,11 +12,14 @@ reuse and aborted runs, the unified telemetry ``to_dict`` shape, and the
 ``teacher_forced_agreement`` edge cases.
 """
 import json
+import math
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+from _hypothesis_compat import given, settings, st
 
 from repro.configs import get_config, reduced
 from repro.core import EngineContext, FXP16, PrecisionPolicy
@@ -92,6 +95,61 @@ def test_streaming_histogram_weighted_observe():
     h.observe(0.5, n=7)
     assert h.count == 7
     assert h.summary()["p99"] == pytest.approx(0.5)
+
+
+@given(st.lists(st.floats(min_value=1e-6, max_value=1e3), min_size=1,
+                max_size=200))
+@settings(max_examples=60, deadline=None)
+def test_streaming_histogram_quantile_bound(values):
+    """The documented accuracy contract, as a property: every reported
+    percentile is within one geometric-bucket growth factor of the exact
+    order statistic, for any latency-plausible value set.
+
+    The histogram's quantile is the midpoint of the bucket holding the
+    rank-th observation; a value ``v`` in bucket ``i`` satisfies
+    ``floor*growth**(i-1) < v <= floor*growth**i``, so midpoint/value lies
+    in ``[growth**-0.5, growth**0.5)`` — and the [min, max] clamp can only
+    move the estimate *toward* the exact value, never past it.
+    """
+    h = StreamingHistogram()
+    for v in values:
+        h.observe(v)
+    ordered = sorted(values)
+    for q in (0.50, 0.90, 0.99):
+        exact = ordered[max(math.ceil(q * len(ordered)) - 1, 0)]
+        approx = h.quantile(q)
+        ratio = approx / exact
+        assert 1 / h.growth <= ratio <= h.growth * (1 + 1e-9), (
+            f"p{q}: approx {approx} vs exact {exact} "
+            f"(ratio {ratio}, growth {h.growth})")
+    # exact aggregates stay exact regardless of bucketing
+    assert h.count == len(values)
+    assert h.lo == pytest.approx(min(values))
+    assert h.hi == pytest.approx(max(values))
+    assert h.total == pytest.approx(sum(values), rel=1e-9)
+
+
+@given(st.floats(min_value=1e-12, max_value=1e-7),
+       st.floats(min_value=1e-12, max_value=1e-7))
+@settings(max_examples=30, deadline=None)
+def test_streaming_histogram_below_floor_clamps_exact(a, b):
+    """Values at or below the bucket floor all share bucket 0, whose raw
+    midpoint is the floor itself — the [min, max] clamp is what keeps the
+    reported percentiles inside the actually-observed range."""
+    h = StreamingHistogram()
+    h.observe(a)
+    h.observe(b)
+    for q in (0.50, 0.99):
+        assert min(a, b) <= h.quantile(q) <= max(a, b)
+
+
+def test_streaming_histogram_single_huge_value_clamped():
+    # the top tail: one bucket past every observation returns hi, and the
+    # clamp keeps midpoints from overshooting the observed max
+    h = StreamingHistogram()
+    h.observe(5e4)
+    for q in (0.5, 0.9, 0.99):
+        assert h.quantile(q) == pytest.approx(5e4)
 
 
 def test_registry_reset_symmetric():

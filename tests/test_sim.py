@@ -1,0 +1,495 @@
+"""PE-array simulator: cost model units, calibration fits, trace replay.
+
+Three layers of pinning, cheapest first:
+
+* **array** — ``dot_pass_cost`` on a degenerate config reproduces the
+  analytic ``mac_cycles`` model exactly; waves, stalls, format bits, and
+  the parallel penalty each move cost in the documented direction.
+* **calibration** — ``fit_calibration`` recovers known constants from
+  synthetic measurements, degrades gracefully when the depth signal is
+  noise, and round-trips through JSON into ``estimate_point_cycles`` /
+  ``build_bank`` without changing any pinned-controller serving decision
+  (bit-identity: calibration refines the cost *scale*, never the greedy
+  token stream).
+* **replay** — a real serve trace replays deterministically, attributes
+  cycles to every request/phase/layer, and reproduces the serving loop's
+  own ``est_cycle_savings_frac`` (adaptive and speculative mirrors) from
+  the trace alone.
+"""
+import json
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.core import (
+    EngineContext,
+    FXP8,
+    PrecisionPolicy,
+    mac_cycles,
+)
+from repro.models import get_model
+from repro.obs import ServingObserver, iter_trace, read_trace
+from repro.runtime import (
+    ControllerConfig,
+    ModeController,
+    build_bank,
+    default_points,
+)
+from repro.runtime.telemetry import calibration_id, estimate_point_cycles
+from repro.serve.engine import BatchedServer, Request
+from repro.sim import (
+    ArrayConfig,
+    dot_pass_cost,
+    fit_calibration,
+    load_calibration,
+    replay_trace,
+    save_calibration,
+)
+from repro.sim.analyze import (
+    ordering_inversions,
+    render,
+    report_dict,
+    savings_drift,
+)
+from repro.spec import SpecConfig
+
+
+# -- array cost model ---------------------------------------------------------
+
+IDEAL_1PE = ArrayConfig(n_pes=1, af_blocks=1, weight_bits_per_cycle=1e12,
+                        af_cycles_per_elem=0.0)
+
+
+def test_single_pe_reproduces_analytic_mac_cycles():
+    # one PE, one lane, no stalls: the simulator IS mac_cycles
+    for k, depth in ((1, 0), (64, 4), (256, 7), (512, 13)):
+        c = dot_pass_cost(IDEAL_1PE, k, 1, depth)
+        assert c.total == mac_cycles(k, depth)
+        assert c.weight_stall == 0.0 and c.af_stall == 0.0
+
+
+def test_wave_quantization_charges_partial_waves_fully():
+    cfg = ArrayConfig(n_pes=256)
+    full = dot_pass_cost(cfg, 64, 256, 7)
+    partial = dot_pass_cost(cfg, 64, 257, 7)  # one extra lane -> whole wave
+    assert partial.compute == pytest.approx(2 * full.compute)
+
+
+def test_weight_stream_stall_binds_at_low_bandwidth():
+    starved = ArrayConfig(n_pes=256, weight_bits_per_cycle=1.0)
+    c = dot_pass_cost(starved, 64, 256, 7)
+    assert c.weight_stall > 0
+    # the bound resource's time is the total: stream = compute + stall
+    assert c.total == pytest.approx(c.compute + c.weight_stall)
+    assert dot_pass_cost(ArrayConfig(n_pes=256), 64, 256, 7).weight_stall == 0
+
+
+def test_fxp16_streams_twice_the_bits():
+    tight = ArrayConfig(n_pes=256, weight_bits_per_cycle=64.0)
+    w8 = dot_pass_cost(tight, 64, 256, 7, bits=8)
+    w16 = dot_pass_cost(tight, 64, 256, 7, bits=16)
+    assert w16.weight_stall > w8.weight_stall
+
+
+def test_af_contention_stalls_small_k_dots():
+    # k tiny, n huge: the AF block outlives the MAC shadow
+    cfg = ArrayConfig(n_pes=256, af_blocks=1)
+    c = dot_pass_cost(cfg, 1, 4096, 7)
+    assert c.af_stall > 0
+    # more AF blocks drain the same work faster
+    more = dot_pass_cost(ArrayConfig(n_pes=256, af_blocks=64), 1, 4096, 7)
+    assert more.af_stall < c.af_stall
+
+
+def test_af_cost_rides_the_depth_ladder():
+    # AF is CORDIC-iterative: with af_iter_cycles fitted, per-point cost
+    # stays proportional to depth+1 — the property that keeps calibrated
+    # savings fractions equal to analytic ones
+    cfg = ArrayConfig(n_pes=64, af_blocks=1, af_iter_cycles=4.0)
+    c4 = dot_pass_cost(cfg, 8, 512, 4)
+    c7 = dot_pass_cost(cfg, 8, 512, 7)
+    assert c7.total / c4.total == pytest.approx((7 + 1) / (4 + 1))
+
+
+def test_parallel_penalty_and_scaled_override():
+    base = ArrayConfig(n_pes=256)
+    penalized = base.scaled(parallel_overhead_exp=0.5)
+    c0 = dot_pass_cost(base, 64, 256, 7)
+    c1 = dot_pass_cost(penalized, 64, 256, 7)
+    assert c1.total == pytest.approx(c0.total * 256 ** 0.5)
+    assert penalized.n_pes == 256  # scaled() replaces only what it is given
+
+
+def test_lane_scaling_exponent_round_trips():
+    # the Table 5 shape: an N-lane dot on an N-PE array; the fitted exponent
+    # must come back out of the full cost model
+    exp = 0.37
+    cost = {}
+    for n in (64, 256):
+        cfg = ArrayConfig(n_pes=n, parallel_overhead_exp=exp)
+        cost[n] = dot_pass_cost(cfg, 512, n, 7, positions=128).total
+    assert math.log(cost[256] / cost[64]) / math.log(4) == pytest.approx(exp)
+
+
+def test_array_config_validates():
+    with pytest.raises(ValueError):
+        ArrayConfig(n_pes=0)
+    with pytest.raises(ValueError):
+        ArrayConfig(af_blocks=0)
+
+
+# -- calibration --------------------------------------------------------------
+
+def _synthetic_measurements(*, sec_per_iter=2e-9, mac_overhead=0.25,
+                            dispatch_s=1e-4, af_iter=3.0, exponent=0.5):
+    m, k, n = 64, 256, 64
+    macs = m * k * n
+    times = {d: dispatch_s + macs * sec_per_iter * (d + 1 + mac_overhead)
+             for d in (2, 4, 7)}
+    n_elems = 64 * 512
+    af_depth = 7
+    af_t = dispatch_s + n_elems * af_iter * (af_depth + 1) * sec_per_iter
+    return {
+        "mac": {"shape": [m, k, n], "times_by_depth": times},
+        "dispatch_s": dispatch_s,
+        "af": {"shape": [64, 512], "depth": af_depth, "n_elems": n_elems,
+               "times_by_mode": {"relu": af_t, "gelu": af_t}},
+        "lanes": {"shape": [1024, 256],
+                  "times_by_n": {64: 1.0, 256: 4.0 ** exponent}},
+        "smoke": True,
+    }
+
+
+def test_fit_recovers_known_constants():
+    cal = fit_calibration(_synthetic_measurements())
+    c = cal["constants"]
+    assert c["sec_per_cycle"] == pytest.approx(2e-9, rel=1e-6)
+    assert c["mac_overhead"] == pytest.approx(0.25, rel=1e-3)
+    assert c["af_iter_cycles"] == pytest.approx(3.0, rel=0.05)
+    assert c["parallel_overhead_exp"] == pytest.approx(0.5, rel=1e-6)
+    assert c["host_sync_cycles"] == pytest.approx(1e-4 / 2e-9, rel=1e-6)
+    assert not cal["fit"]["mac_slope_fallback"]
+    assert cal["fit"]["mac_fit_max_rel_resid"] < 1e-9
+    assert cal["id"].startswith("calib-")
+
+
+def test_fit_degrades_gracefully_without_depth_signal():
+    meas = _synthetic_measurements()
+    # depth-independent timings: the fast error-model's signature
+    meas["mac"]["times_by_depth"] = {2: 3e-4, 4: 3e-4, 7: 3e-4}
+    cal = fit_calibration(meas)
+    assert cal["fit"]["mac_slope_fallback"]
+    assert cal["constants"]["sec_per_cycle"] > 0
+    assert 0.0 <= cal["constants"]["mac_overhead"] <= 1.0
+
+
+def test_fit_requires_two_depths():
+    meas = _synthetic_measurements()
+    meas["mac"]["times_by_depth"] = {7: 1e-3}
+    with pytest.raises(ValueError):
+        fit_calibration(meas)
+
+
+def test_calibration_roundtrip_and_guards(tmp_path):
+    cal = fit_calibration(_synthetic_measurements())
+    path = str(tmp_path / "cal.json")
+    save_calibration(cal, path)
+    loaded = load_calibration(path)
+    assert loaded["constants"] == pytest.approx(cal["constants"])
+    assert calibration_id(loaded) == cal["id"]
+    assert calibration_id(None) == "analytic"
+
+    cfg = ArrayConfig.from_calibration(loaded)
+    assert cfg.mac_overhead == pytest.approx(0.25, rel=1e-3)
+    assert cfg.sec_per_cycle == pytest.approx(2e-9, rel=1e-6)
+    assert ArrayConfig.from_calibration(None) == ArrayConfig()
+
+    bad = dict(cal, schema="something-else")
+    bad_path = str(tmp_path / "bad.json")
+    with open(bad_path, "w") as f:
+        json.dump(bad, f)
+    with pytest.raises(ValueError, match="schema"):
+        load_calibration(bad_path)
+    future = dict(cal, version=99)
+    with open(bad_path, "w") as f:
+        json.dump(future, f)
+    with pytest.raises(ValueError, match="newer"):
+        load_calibration(bad_path)
+
+
+# -- calibration -> runtime costs --------------------------------------------
+
+def _setup(d_model=64):
+    cfg = reduced(get_config("olmo-1b"), layers=2, d_model=d_model)
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def test_estimate_point_cycles_calibrated_preserves_ordering():
+    _, model, params = _setup()
+    policies = {
+        "approx": PrecisionPolicy.approximate(FXP8),
+        "accurate": PrecisionPolicy.accurate(FXP8),
+    }
+    cal = fit_calibration(_synthetic_measurements())
+    for name in policies:
+        analytic = estimate_point_cycles(params, policies[name],
+                                         specs=model.specs())
+        calibrated = estimate_point_cycles(params, policies[name],
+                                           specs=model.specs(),
+                                           calibration=cal)
+        # mac_overhead only ever adds cycles
+        assert calibrated > analytic
+    # and the ladder ordering survives calibration
+    a = estimate_point_cycles(params, policies["approx"], specs=model.specs(),
+                              calibration=cal)
+    b = estimate_point_cycles(params, policies["accurate"],
+                              specs=model.specs(), calibration=cal)
+    assert a < b
+
+
+def _requests(cfg, n, *, max_new=6):
+    rng = np.random.default_rng(0)
+    return [
+        Request(i, rng.integers(0, cfg.vocab_size, 4 + i).astype(np.int32),
+                max_new)
+        for i in range(n)
+    ]
+
+
+def test_calibrated_bank_pinned_controller_bit_identity():
+    """Calibration rescales every point's cost estimate; a pinned controller
+    must serve the exact same tokens either way, and the bank must record
+    which cycle model priced it."""
+    cfg, model, params = _setup()
+    ctx = EngineContext(mode="carmen", policy=PrecisionPolicy.accurate(FXP8),
+                        compute_dtype=jnp.float32)
+    cal = fit_calibration(_synthetic_measurements())
+    outs = {}
+    banks = {}
+    for label, calibration in (("analytic", None), ("calibrated", cal)):
+        bank = build_bank(params, "carmen", default_points(FXP8, hifi_fmt=None),
+                          specs=model.specs(), calibration=calibration)
+        server = BatchedServer(
+            model, ctx, params, slots=2, max_len=24,
+            controller=ModeController(bank,
+                                      ControllerConfig(pin=bank.reference)),
+        )
+        outs[label] = server.run(_requests(cfg, 3))
+        banks[label] = bank
+        assert server.telemetry.to_dict()["cycle_model"] \
+            == calibration_id(calibration)
+    assert outs["analytic"] == outs["calibrated"]
+    assert banks["analytic"].cycle_model == "analytic"
+    assert banks["calibrated"].cycle_model == cal["id"]
+    # calibrated absolute costs differ...
+    assert banks["calibrated"].cycles_per_token != \
+        banks["analytic"].cycles_per_token
+    # ...but relative cost (what the controller compares) is preserved
+    for name in banks["analytic"].names:
+        assert banks["calibrated"].rel_cycles(name) == pytest.approx(
+            banks["analytic"].rel_cycles(name), rel=0.08)
+
+
+# -- replay -------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def adaptive_trace(tmp_path_factory):
+    """One adaptive serve run with a live controller, traced to JSONL."""
+    cfg, model, params = _setup()
+    ctx = EngineContext(mode="carmen", policy=PrecisionPolicy.accurate(FXP8),
+                        compute_dtype=jnp.float32)
+    bank = build_bank(params, "carmen", default_points(FXP8, hifi_fmt=None),
+                      specs=model.specs())
+    server = BatchedServer(
+        model, ctx, params, slots=2, max_len=24, burst=4,
+        controller=ModeController(bank, ControllerConfig(cycle_budget=0.75)),
+    )
+    server.observer = ServingObserver(trace=True)
+    out = server.run(_requests(cfg, 3, max_new=8))
+    path = str(tmp_path_factory.mktemp("sim") / "adaptive.jsonl")
+    server.observer.trace.write_jsonl(path)
+    return path, out, server.telemetry.summary()
+
+
+@pytest.fixture(scope="module")
+def spec_trace(tmp_path_factory):
+    """One speculative serve run, traced to JSONL."""
+    cfg, model, params = _setup()
+    ctx = EngineContext(mode="carmen", policy=PrecisionPolicy.accurate(FXP8),
+                        compute_dtype=jnp.float32)
+    bank = build_bank(params, "carmen", default_points(FXP8, hifi_fmt=None),
+                      specs=model.specs())
+    server = BatchedServer(model, ctx, params, slots=2, max_len=32, bank=bank,
+                           speculate=SpecConfig(draft_len=3))
+    server.observer = ServingObserver(trace=True)
+    out = server.run(_requests(cfg, 3, max_new=8))
+    path = str(tmp_path_factory.mktemp("sim") / "spec.jsonl")
+    server.observer.trace.write_jsonl(path)
+    return path, out, server.spec_telemetry.summary()
+
+
+def test_replay_reproduces_reported_savings(adaptive_trace):
+    path, _, telemetry = adaptive_trace
+    result = replay_trace(path)
+    # the analytic array and the analytic bank are the same cost model: the
+    # token-weighted savings mirror must land exactly on the reported value
+    # (summary() rounds for printing; the drift vs the trace's full-precision
+    # record is the exact check)
+    assert result.savings["est_cycle_savings_frac"] == pytest.approx(
+        telemetry["est_cycle_savings_frac"], abs=1e-4)
+    assert savings_drift(result) == pytest.approx(0.0, abs=1e-9)
+
+
+def test_replay_is_deterministic(adaptive_trace):
+    path, _, _ = adaptive_trace
+    a = report_dict(replay_trace(path))
+    b = report_dict(replay_trace(path))
+    assert json.loads(json.dumps(a)) == json.loads(json.dumps(b))
+
+
+def test_replay_attributes_every_request_and_token(adaptive_trace):
+    path, out, _ = adaptive_trace
+    result = replay_trace(path)
+    assert set(result.requests) == {str(r) for r in out}
+    for rid, generated in out.items():
+        assert result.requests[str(rid)]["tokens"] == len(generated)
+        assert result.requests[str(rid)]["cycles"] > 0
+    assert result.measured["tokens"] == sum(len(v) for v in out.values())
+    # request cycle attribution tiles the charged decode+prefill cycles
+    attributed = sum(r["cycles"] for r in result.requests.values())
+    charged = result.phases.get("prefill", 0) + result.phases.get("decode", 0)
+    assert attributed == pytest.approx(charged, rel=1e-9)
+
+
+def test_replay_totals_are_consistent(adaptive_trace):
+    path, _, _ = adaptive_trace
+    result = replay_trace(path)
+    t = result.totals
+    assert t["total_cycles"] == pytest.approx(
+        t["array_cycles"] + t["host_sync_cycles"])
+    assert 0 < t["pe_occupancy"] <= 1.0
+    assert t["predicted_wall_s"] is None  # analytic array has no wall anchor
+    assert sum(result.phases.values()) == pytest.approx(t["total_cycles"])
+    assert set(result.points) <= {"approx", "accurate"}
+    assert result.counts["switches"] >= 1  # live controller actually moved
+    assert result.measured["wall_s"] > 0
+
+
+def test_replay_calibrated_array_keeps_savings(adaptive_trace):
+    """The calibrated model rescales cycles but prices every point on the
+    same depth ladder, so the savings fraction survives calibration — the
+    bench_sim acceptance gate, pinned as a unit test."""
+    path, _, telemetry = adaptive_trace
+    cal = fit_calibration(_synthetic_measurements(mac_overhead=0.0))
+    result = replay_trace(path, calibration=cal)
+    assert result.savings["est_cycle_savings_frac"] == pytest.approx(
+        telemetry["est_cycle_savings_frac"], abs=1e-4)
+    assert savings_drift(result) == pytest.approx(0.0, abs=1e-9)
+    assert result.totals["predicted_wall_s"] > 0
+    assert result.totals["host_sync_cycles"] > 0
+
+
+def test_replay_spec_trace_mirrors_spec_telemetry(spec_trace):
+    path, out, telemetry = spec_trace
+    result = replay_trace(path)
+    assert result.counts["spec_rounds"] > 0
+    assert result.phases["spec_draft"] > 0
+    assert result.phases["spec_verify"] > 0
+    spec = result.savings["speculative"]
+    assert spec["est_cycle_savings_frac"] == pytest.approx(
+        telemetry["est_cycle_savings_frac"], abs=1e-4)
+    assert spec["rel_diff_vs_reported"] == pytest.approx(0.0, abs=1e-9)
+    assert result.measured["tokens"] == sum(len(v) for v in out.values())
+
+
+def test_replay_rejects_traces_without_engine_block(tmp_path):
+    from repro.obs import TraceRecorder
+
+    tr = TraceRecorder()
+    tr.begin("run", track="run")
+    tr.end("run", track="run")
+    path = str(tmp_path / "bare.jsonl")
+    tr.write_jsonl(path)
+    with pytest.raises(ValueError, match="engine cost table"):
+        replay_trace(path)
+
+
+def test_replay_cli_writes_json_report(adaptive_trace, tmp_path, capsys):
+    from repro.sim.replay import main
+
+    path, _, _ = adaptive_trace
+    out = str(tmp_path / "report.json")
+    main([path, "--json", out])
+    capsys.readouterr()
+    with open(out) as f:
+        report = json.load(f)
+    assert report["totals"]["total_cycles"] > 0
+    assert report["savings"]["reference"] == "accurate"
+
+
+def test_render_report_is_human_readable(adaptive_trace):
+    path, _, _ = adaptive_trace
+    text = render(replay_trace(path))
+    for needle in ("PE-array replay", "where cycles go", "savings",
+                   "requests"):
+        assert needle in text
+
+
+# -- streaming trace reader (satellite of the replay path) --------------------
+
+def test_iter_trace_streams_and_matches_read_trace(adaptive_trace):
+    path, _, _ = adaptive_trace
+    header, events = read_trace(path)
+    with iter_trace(path) as tr:
+        assert tr.header == header
+        streamed = list(tr)
+    assert streamed == events
+
+
+def test_iter_trace_validates_header_eagerly(tmp_path):
+    bad = tmp_path / "bad.jsonl"
+    bad.write_text(json.dumps({"schema": "not-a-trace", "version": 1}) + "\n")
+    with pytest.raises(ValueError, match="not-a-trace"):
+        iter_trace(str(bad))
+
+
+# -- analyze gates ------------------------------------------------------------
+
+def test_ordering_inversions_detects_and_excludes():
+    rows = [("a", 100.0, 1.0), ("b", 200.0, 0.5), ("c", 205.0, 2.0)]
+    inv = ordering_inversions(rows, margin=0.10)
+    # a vs b: predicted says b costs more, measured says b is faster
+    assert {tuple(i["pair"]) for i in inv} >= {("a", "b")}
+    # b vs c is a predicted near-tie: excluded even though measured inverts
+    assert ("b", "c") not in {tuple(i["pair"]) for i in inv}
+    # measured near-ties are excluded symmetrically
+    assert ordering_inversions([("a", 100.0, 1.0), ("b", 200.0, 0.99)]) == []
+    # rows without measurements never compare
+    assert ordering_inversions([("a", 100.0, None), ("b", 200.0, 1.0)]) == []
+
+
+def test_check_trend_normalizes_machine_speed():
+    from benchmarks.check_trend import collect_tok_s, compare_records
+
+    baseline = {"configs": {"x": {"tok_s": 100.0}, "y": {"tok_s": 200.0},
+                            "z": {"sweep": [{"tok_s": 50.0}]}}}
+    # uniformly 2x slower machine: no regression after normalization
+    slower = {"configs": {"x": {"tok_s": 50.0}, "y": {"tok_s": 100.0},
+                          "z": {"sweep": [{"tok_s": 25.0}]}}}
+    regs, median = compare_records(slower, baseline, tolerance=0.10)
+    assert regs == [] and median == pytest.approx(0.5)
+    # one config regressing against its siblings is flagged
+    one_bad = {"configs": {"x": {"tok_s": 100.0}, "y": {"tok_s": 200.0},
+                           "z": {"sweep": [{"tok_s": 30.0}]}}}
+    regs, _ = compare_records(one_bad, baseline, tolerance=0.10)
+    assert [r["path"] for r in regs] == ["configs.z.sweep[0].tok_s"]
+    # path collection sees nested and list-indexed keys
+    paths = dict(collect_tok_s(baseline))
+    assert set(paths) == {"configs.x.tok_s", "configs.y.tok_s",
+                          "configs.z.sweep[0].tok_s"}
