@@ -51,8 +51,20 @@ def sd_round_traced(w, depth, w_fmt: FxPFormat):
 
 
 def quantize_activations(x, x_fmt: FxPFormat):
-    """Fake-quantize activations into the FxP grid (float32 values out)."""
-    return dequantize(quantize(x, x_fmt), x_fmt).astype(jnp.float32)
+    """Fake-quantize activations into the FxP grid (float32 values out).
+
+    Identity on non-finite inputs: the float->int32 grid cast would otherwise
+    launder a NaN/Inf (e.g. from a poisoned KV row) into a plausible finite
+    value — silent data corruption that the serving fault flag
+    (``serve.engine.make_decode_burst``) could never see at the logits. Real
+    FxP silicon cannot hold a NaN either, but there the symptom is a
+    saturated accumulator (the ``logit_limit`` probe); the float simulation
+    keeps the poison explicit instead. Finite values are untouched, so clean
+    streams stay bit-identical.
+    """
+    xf = jnp.asarray(x, jnp.float32)
+    q = dequantize(quantize(xf, x_fmt), x_fmt).astype(jnp.float32)
+    return jnp.where(jnp.isfinite(xf), q, xf)
 
 
 # --- fake-quant forward, straight-through backward ---------------------------

@@ -23,6 +23,22 @@ shapes. ``--metrics``/``--metrics-out`` report per-request SLO latency
 (TTFT, inter-token, queue-wait percentiles); ``--trace-out`` /
 ``--chrome-trace`` export the structured serve trace (JSONL replay format /
 Perfetto); ``--profile DIR`` additionally captures a ``jax.profiler`` trace.
+
+Fault tolerance (``repro.resilience``, see ``docs/robustness.md``) — any of
+the flags below switches the server from fail-stop to shed/quarantine/
+degrade, with a per-request outcome summary printed at the end::
+
+    # per-request deadlines: requests that cannot finish inside 500 ms are
+    # shed from the queue or evicted mid-decode with partial output
+    ... --deadline-ms 500
+
+    # bounded admission queue: at most 8 requests held; overload is shed
+    # fast with attributable reasons instead of waiting unboundedly
+    ... --queue-limit 8 --shed-policy deadline_aware
+
+    # graceful degradation: under deadline misses / queue pressure the whole
+    # batch demotes down the CORDIC depth ladder before anything is shed
+    ... --adaptive --deadline-ms 500 --degrade
 """
 from __future__ import annotations
 
@@ -114,6 +130,33 @@ def main(argv=None):
                          "mesh: 'DATA,MODEL' extents (e.g. --mesh 4,2) or "
                          "'auto' to factor the local device count (see "
                          "XLA_FLAGS=--xla_force_host_platform_device_count)")
+    res_args = ap.add_argument_group(
+        "resilience",
+        "fault-tolerant serving (repro.resilience): deadlines, bounded "
+        "admission with load shedding, per-slot fault quarantine, graceful "
+        "precision degradation — any flag here enables the resilient "
+        "contract (structured RequestOutcomes instead of crashes)")
+    res_args.add_argument("--deadline-ms", type=float, default=None,
+                          help="per-request deadline in ms from run entry: "
+                               "expired queued requests are shed, expired "
+                               "running requests are evicted with partial "
+                               "output at the next burst boundary")
+    res_args.add_argument("--queue-limit", type=int, default=None,
+                          help="bounded admission queue: overflow is shed "
+                               "per --shed-policy with reason queue_full")
+    res_args.add_argument("--shed-policy", default="reject_newest",
+                          choices=["reject_newest", "reject_largest",
+                                   "deadline_aware"],
+                          help="queue-overflow victim selection")
+    res_args.add_argument("--degrade", action="store_true",
+                          help="graceful degradation: cap the whole batch "
+                               "down the bank's depth ladder under deadline "
+                               "misses / queue pressure, promote back with "
+                               "hysteresis (needs a bank: --adaptive or "
+                               "--speculative)")
+    res_args.add_argument("--degrade-floor", default=None, metavar="POINT",
+                          help="--degrade: cheapest bank point the cap may "
+                               "reach (default: the cheapest rung)")
     obs_args = ap.add_argument_group(
         "observability",
         "SLO metrics + structured serve trace (repro.obs); hooks run only at "
@@ -204,6 +247,30 @@ def main(argv=None):
         speculate = SpecConfig(draft_len=args.draft_len,
                                draft_point=args.draft_point)
 
+    resilience = None
+    if args.deadline_ms is not None or args.queue_limit is not None or args.degrade:
+        from repro.resilience import ResilienceConfig
+
+        resilience = ResilienceConfig(
+            queue_limit=args.queue_limit,
+            shed_policy=args.shed_policy,
+            default_deadline_s=(args.deadline_ms / 1000.0
+                                if args.deadline_ms is not None else None),
+        )
+    if args.degrade:
+        if bank is None:
+            raise SystemExit("--degrade needs a multi-point bank: add "
+                             "--adaptive or --speculative")
+        from repro.resilience import DegradationConfig, DegradationPolicy
+        from repro.runtime import ControllerConfig, ModeController
+
+        # without --adaptive the inner controller pins the reference point —
+        # degradation then is the only thing moving the ladder
+        inner = controller or ModeController(
+            bank, ControllerConfig(pin=bank.reference))
+        controller = DegradationPolicy(
+            inner, DegradationConfig(floor=args.degrade_floor))
+
     server = BatchedServer(
         model, ctx, params, slots=args.slots,
         max_len=args.prompt_len + args.max_new
@@ -214,6 +281,7 @@ def main(argv=None):
         speculate=speculate,
         bank=bank,
         mesh=mesh,
+        resilience=resilience,
     )
     if server.shardings is not None:
         from repro.sharding.partition import serving_sharding_report
@@ -224,7 +292,9 @@ def main(argv=None):
     if args.metrics or args.metrics_out or want_trace:
         from repro.obs import ServingObserver
 
-        observer = ServingObserver(trace=want_trace)
+        # trace_sink: the JSONL trace is flushed there even if the run
+        # raises, so crashed-run traces stay replayable
+        observer = ServingObserver(trace=want_trace, trace_sink=args.trace_out)
         server.observer = observer
     rng = np.random.default_rng(0)
     reqs = [
@@ -252,6 +322,21 @@ def main(argv=None):
           f"({total_tokens/max(dt,1e-9):.1f} tok/s, mode={args.mode}, "
           f"burst={args.burst}, {server.host_transfers} host round-trips, "
           f"{serving}{weights} weights)")
+    if resilience is not None:
+        statuses: dict = {}
+        for o in server.outcomes.values():
+            statuses[o.status] = statuses.get(o.status, 0) + 1
+        met = sum(1 for o in server.outcomes.values() if o.deadline_met)
+        print(f"outcomes: {statuses}; deadline_met {met}/"
+              f"{len(server.outcomes)}")
+        shed = {rid: o.reason for rid, o in sorted(server.outcomes.items())
+                if o.status in ("shed", "faulted", "expired")}
+        if shed:
+            print(f"shed/evicted reasons: {shed}")
+        if args.degrade:
+            print(f"degradation: cap={controller.cap} "
+                  f"demotions={controller.demotions} "
+                  f"promotions={controller.promotions}")
     if server.telemetry is not None:
         print("telemetry:", json.dumps(server.telemetry.summary()))
     if server.spec_telemetry is not None:

@@ -59,9 +59,14 @@ class ServingObserver:
     """Metrics + trace hooks for one serving run (see module docstring)."""
 
     def __init__(self, metrics: bool = True, trace: bool = True,
-                 clock=time.perf_counter) -> None:
+                 clock=time.perf_counter,
+                 trace_sink: Optional[str] = None) -> None:
         self._clock = clock
         self._want_trace = trace
+        # trace_sink: a JSONL path the trace is flushed to at run_end even
+        # when the run aborted (TraceRecorder's crash-safe sink), so traces
+        # from crashed runs stay replayable
+        self.trace_sink = trace_sink
         self.metrics = MetricsRegistry() if metrics else None
         self.trace: Optional[TraceRecorder] = None
         self.requests: Dict[int, _ReqState] = {}
@@ -76,7 +81,8 @@ class ServingObserver:
         entry), which anchors queue-wait and TTFT."""
         if self.metrics is not None:
             self.metrics.reset()
-        self.trace = TraceRecorder(clock=self._clock) if self._want_trace else None
+        self.trace = (TraceRecorder(clock=self._clock, sink=self.trace_sink)
+                      if self._want_trace else None)
         self.requests = {}
         self._span_t0 = {}
         self.aborted = None
@@ -125,8 +131,58 @@ class ServingObserver:
             self.trace.close_open()
             self.trace.header["meta"]["aborted"] = aborted
             self.trace.attach("telemetry", telemetry or [])
+            if aborted and self.trace.sink is not None:
+                # crashed run: the caller's normal export path never runs, so
+                # flush the settled trace to the sink now — it stays
+                # replayable (satellite of the aborted-run symmetry fix)
+                self.trace.flush()
 
     # -- admission / prefill --------------------------------------------------
+
+    def request_shed(self, rid: int, reason: str) -> None:
+        """The request was rejected at admission (never held a slot):
+        bounded-queue overflow, oversized/empty prompt, or a deadline that
+        expired while queued. ``reason`` is the structured attribution the
+        overload gates assert on."""
+        st = self.requests.get(rid)
+        if st is not None:
+            st.done = self._now()
+        self._count("shed")
+        self._count(f"shed_{reason}")
+        if self.trace is not None:
+            self.trace.instant("request_shed", track="sched", rid=rid,
+                               reason=reason)
+
+    def request_expired(self, rid: int, tokens: int) -> None:
+        """An admitted request missed its deadline mid-decode and was
+        evicted at the burst boundary with ``tokens`` partial tokens."""
+        now = self._now()
+        st = self.requests[rid]
+        st.done = now
+        self._count("expired")
+        self._count("deadline_misses")
+        if self.trace is not None:
+            self.trace.instant("request_expired", track=_slot_track(st),
+                               rid=rid, tokens=tokens)
+            if st.admit is not None:
+                self.trace.end(f"request:{rid}", track=_slot_track(st),
+                               rid=rid, tokens=tokens)
+
+    def request_faulted(self, rid: int, tokens: int,
+                        reason: Optional[str] = None) -> None:
+        """An admitted request produced non-finite/saturated logits and was
+        quarantined; ``tokens`` clean tokens were committed before the
+        fault."""
+        now = self._now()
+        st = self.requests[rid]
+        st.done = now
+        self._count("faulted")
+        if self.trace is not None:
+            self.trace.instant("request_faulted", track=_slot_track(st),
+                               rid=rid, tokens=tokens, reason=reason)
+            if st.admit is not None:
+                self.trace.end(f"request:{rid}", track=_slot_track(st),
+                               rid=rid, tokens=tokens)
 
     def request_admitted(self, rid: int, slot: int) -> None:
         st = self.requests[rid]

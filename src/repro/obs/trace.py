@@ -42,11 +42,22 @@ TRACE_VERSION = 1
 
 
 class TraceRecorder:
-    """Append-only event recorder for one serving run."""
+    """Append-only event recorder for one serving run.
 
-    def __init__(self, clock=time.perf_counter) -> None:
+    ``sink`` names a JSONL path the recorder can always flush to. Used as a
+    context manager, a recorder with a sink is crash-safe: if the ``with``
+    body raises, ``__exit__`` settles the open spans (:meth:`close_open`)
+    and writes the JSONL tail anyway, so the trace of a crashed or aborted
+    run is still complete, well-formed, and replayable by ``sim/replay.py``
+    (``meta.aborted`` is set so the replay report names it). A normal exit
+    flushes too — ``flush()`` is idempotent and explicit calls remain fine.
+    """
+
+    def __init__(self, clock=time.perf_counter,
+                 sink: Optional[str] = None) -> None:
         self._clock = clock
         self._t0 = clock()
+        self.sink = sink
         self.header: Dict = {
             "schema": TRACE_SCHEMA,
             "version": TRACE_VERSION,
@@ -97,6 +108,26 @@ class TraceRecorder:
         for track, stack in self._open.items():
             while stack:
                 self._emit("E", stack.pop(), track, args)
+
+    def flush(self, path: Optional[str] = None) -> Optional[str]:
+        """Settle open spans and write the JSONL trace to ``path`` (default:
+        the configured ``sink``). Returns the written path, or None when
+        neither is set. Safe to call repeatedly — the exports rewrite."""
+        target = path or self.sink
+        if target is None:
+            return None
+        self.close_open()
+        return self.write_jsonl(target)
+
+    # -- context manager: flush-on-exception ----------------------------------
+
+    def __enter__(self) -> "TraceRecorder":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        if exc_type is not None:
+            self.header.setdefault("meta", {})["aborted"] = True
+        self.flush()
 
     # -- exports --------------------------------------------------------------
 

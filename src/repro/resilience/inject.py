@@ -1,0 +1,155 @@
+"""Deterministic fault injection for serving-resilience tests and benchmarks.
+
+A :class:`FaultInjector` holds a set of fault descriptions, each pinned to a
+decode-round index (``at_round``); the server calls
+``injector.before_round(server, round_idx, slot_of)`` immediately before
+dispatching each burst / speculative round, and any fault whose round has
+come fires exactly once. Nothing here reads the wall clock or an unseeded
+PRNG — a fault plan is pure configuration, so an injected run is exactly as
+reproducible as a clean one (which is what lets the robustness gates assert
+*bit-identical* streams for unaffected slots).
+
+Fault kinds:
+
+* :class:`NaNCacheFault` — overwrite one request's KV-cache rows (all
+  layers, optionally one layer) with NaN: models a slot-local numeric blowup
+  (activation overflow, corrupted KV page). Only that slot's lane goes
+  non-finite — attention and MoE dispatch are per-batch-row — so this is
+  the canonical isolation probe.
+* :class:`NaNWeightFault` — overwrite prepared-weight leaves (optionally
+  filtered by a path substring) with NaN at one execution point: models a
+  corrupted weight shard; every slot faults at once. The poisoned tree
+  persists for the rest of the server's life — build a fresh server per
+  injected run.
+* :class:`DelayFault` — sleep before one round's dispatch: models a stalled
+  device / preempted host, for driving deadline expiry deterministically.
+
+``oversized_request`` builds the admission-time shed probe (`too_long`).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["DelayFault", "FaultInjector", "NaNCacheFault", "NaNWeightFault",
+           "oversized_request", "poison_cache_slot", "poison_tree"]
+
+
+def poison_cache_slot(cache, slot: int, layer: Optional[int] = None):
+    """NaN every float leaf of ``cache`` at batch row ``slot``.
+
+    Cache leaves are stacked ``(layers, slots, ...)`` arrays; integer leaves
+    (the per-layer write indices) are left intact so the decode program's
+    control flow is untouched — only the slot's numerics blow up.
+    """
+    lsel = slice(None) if layer is None else layer
+
+    def bad(leaf):
+        if not jnp.issubdtype(leaf.dtype, jnp.floating):
+            return leaf
+        return leaf.at[lsel, slot].set(jnp.nan)
+
+    return jax.tree.map(bad, cache)
+
+
+def poison_tree(tree, match: Optional[str] = None):
+    """NaN float leaves of a prepared-weight tree (path-substring filtered)."""
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    hit = 0
+    for path, leaf in leaves:
+        name = jax.tree_util.keystr(path)
+        if (hasattr(leaf, "dtype")
+                and jnp.issubdtype(leaf.dtype, jnp.floating)
+                and (match is None or match in name)):
+            leaf = jnp.full_like(leaf, jnp.nan)
+            hit += 1
+        out.append(leaf)
+    if hit == 0:
+        raise ValueError(f"no float weight leaf matched {match!r}")
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+@dataclasses.dataclass(frozen=True)
+class NaNCacheFault:
+    """Poison request ``rid``'s KV rows before round ``at_round``."""
+
+    rid: int
+    at_round: int
+    layer: Optional[int] = None
+
+    def apply(self, server, slot_of: Dict[int, int]) -> None:
+        if not server.batched_prefill:
+            raise ValueError(
+                f"cache fault injection needs a scatterable KV cache; the "
+                f"{server.model.cfg.family!r} family carries recurrent state"
+            )
+        if self.rid not in slot_of:
+            raise ValueError(
+                f"NaNCacheFault: request {self.rid} is not active at round "
+                f"{self.at_round} (active slots: {sorted(slot_of)})"
+            )
+        server.cache = poison_cache_slot(server.cache, slot_of[self.rid],
+                                         self.layer)
+
+
+@dataclasses.dataclass(frozen=True)
+class NaNWeightFault:
+    """Poison prepared-weight leaves before round ``at_round``.
+
+    ``point`` picks the bank execution point to corrupt (default: whatever
+    the server would serve the next round at); ``layer`` is a substring
+    matched against the leaf path (``None``: every float leaf).
+    """
+
+    at_round: int
+    layer: Optional[str] = None
+    point: Optional[str] = None
+
+    def apply(self, server, slot_of: Dict[int, int]) -> None:
+        bank = getattr(server, "_bank", None)
+        if bank is None:
+            server.params = poison_tree(server.params, self.layer)
+            return
+        name = self.point or server._serving_point() or bank.reference
+        bank.trees[name] = poison_tree(bank.tree(name), self.layer)
+
+
+@dataclasses.dataclass(frozen=True)
+class DelayFault:
+    """Stall the host for ``seconds`` before round ``at_round`` dispatches."""
+
+    at_round: int
+    seconds: float
+
+    def apply(self, server, slot_of: Dict[int, int]) -> None:
+        time.sleep(self.seconds)
+
+
+class FaultInjector:
+    """Fires each configured fault once, at its round, before dispatch."""
+
+    def __init__(self, *faults) -> None:
+        self.faults: Tuple = tuple(faults)
+        self.fired = []  # (round_idx, fault) in firing order
+
+    def before_round(self, server, round_idx: int, slot_of: Dict[int, int]) -> None:
+        for fault in self.faults:
+            if fault.at_round == round_idx:
+                fault.apply(server, slot_of)
+                self.fired.append((round_idx, fault))
+
+
+def oversized_request(rid: int, max_len: int, max_new: int = 8,
+                      request_cls=None):
+    """A request whose ``prompt + max_new`` overflows ``max_len`` — the
+    admission-time ``too_long`` shed probe (legacy servers raise on it)."""
+    if request_cls is None:
+        from repro.serve.engine import Request as request_cls
+    prompt = np.ones((max(max_len - max_new + 1, 1),), np.int32)
+    return request_cls(rid=rid, prompt=prompt, max_new=max_new)

@@ -25,6 +25,7 @@ reachable point pins critical layers accurate (``pin_critical``).
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Optional
 
 from .bank import MultiPointBank
@@ -49,6 +50,11 @@ class StepSignals:
     free_slots: int = 0
     min_margin: Optional[float] = None  # top-2 logit margin, least confident slot
     steps: int = 1                      # engine steps this observation covers
+    # overload telemetry (resilient serving): deadline misses and shed
+    # requests since the last observation. The base controller ignores both;
+    # a DegradationPolicy wrapper reads them as pressure signals.
+    deadline_misses: int = 0
+    shed: int = 0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -125,6 +131,11 @@ class ModeController:
         over_budget = cfg.cycle_budget is not None and self._rel_ema > cfg.cycle_budget
         pressure = signals.queue_depth > 0 and signals.free_slots == 0
         margin = signals.min_margin
+        # a NaN/Inf margin means the logits themselves are suspect (a fault
+        # the serving loop quarantines separately) — it must never read as
+        # "confident" or "uncertain", so it votes exactly like no margin
+        if margin is not None and not math.isfinite(margin):
+            margin = None
         confident = margin is not None and margin >= cfg.margin_demote
         uncertain = margin is not None and margin < cfg.margin_promote
 

@@ -78,7 +78,9 @@ from __future__ import annotations
 
 import contextlib
 import dataclasses
-from typing import Dict, List, Optional
+import math
+import time
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -151,6 +153,7 @@ def top2_margin(logits):
 #   rem   (slots,)   int32   remaining token budget; 0 = slot inactive
 #   key   (slots, 2) uint32  per-request PRNG base key
 #   temp  (slots,)   float32 per-request temperature (<= 0: greedy)
+#   fault (slots,)   bool    non-finite/saturated logits seen since admission
 
 
 def _init_slot_state(slots: int):
@@ -163,6 +166,7 @@ def _init_slot_state(slots: int):
         # PRNGKey(0) stack relied on that overwrite happening eagerly)
         "key": jax.vmap(jax.random.PRNGKey)(jnp.arange(slots)),
         "temp": jnp.zeros((slots,), jnp.float32),
+        "fault": jnp.zeros((slots,), jnp.bool_),
     }
 
 
@@ -174,19 +178,32 @@ def _admit_state(state, slot, tok, base_key, temp, max_new):
         "rem": state["rem"].at[slot].set(max_new - 1),
         "key": state["key"].at[slot].set(base_key),
         "temp": state["temp"].at[slot].set(temp),
+        "fault": state["fault"].at[slot].set(False),
     }
 
 
 def make_decode_burst(model: ModelApi, ctx: EngineContext, burst: int,
-                      sampled: bool = True):
+                      sampled: bool = True,
+                      logit_limit: Optional[float] = None):
     """The decode hot loop: ``burst`` single-token steps as one lax.scan.
 
     ``(tree, cache, state) -> (cache, state, tokens (B, burst), margins
-    (B, burst))``. Tokens/margins accumulate on device; the caller performs
-    ONE host transfer per burst and clips each slot's emitted run to its
-    remaining budget (``state['rem']`` on entry — slots keep computing after
-    their budget drains, their output is discarded and their rows are
-    re-scattered at the next admission).
+    (B, burst), faults (B, burst))``. Tokens/margins accumulate on device;
+    the caller performs ONE host transfer per burst and clips each slot's
+    emitted run to its remaining budget (``state['rem']`` on entry — slots
+    keep computing after their budget drains, their output is discarded and
+    their rows are re-scattered at the next admission).
+
+    ``faults`` is the per-slot numeric-fault flag, cumulative across the
+    burst: step ``j`` is True iff some step ``<= j`` produced a non-finite
+    logit (or, with ``logit_limit``, a logit beyond ``±logit_limit`` — the
+    saturated-accumulator probe) in that slot's lane. The flag folds into
+    the scan carry and persists in ``state['fault']``, so detection costs
+    one ``isfinite``+reduce per step and ZERO extra host round-trips; the
+    host finds the first faulted step as the count of leading False entries
+    and commits only the clean prefix. Token math is untouched — with
+    finite logits the emitted streams are bit-identical to a build without
+    the flag.
 
     ``sampled=False`` compiles the all-greedy variant: no threefry fold /
     categorical per step (a real cost on small models), bit-identical to the
@@ -198,9 +215,13 @@ def make_decode_burst(model: ModelApi, ctx: EngineContext, burst: int,
         keys, temps = state["key"], state["temp"]
 
         def step(carry, _):
-            tok, cache, count, rem = carry
+            tok, cache, count, rem, fault = carry
             logits, cache = model.decode_step(tree, tok, cache, ctx)
             last = logits[:, -1, :].astype(jnp.float32)
+            bad = ~jnp.all(jnp.isfinite(last), axis=-1)
+            if logit_limit is not None:
+                bad |= jnp.any(jnp.abs(last) > logit_limit, axis=-1)
+            fault = fault | bad
             if sampled:
                 nxt = _sample_slots(last, keys, count, temps)
                 margin = top2_margin(last)
@@ -211,16 +232,18 @@ def make_decode_burst(model: ModelApi, ctx: EngineContext, burst: int,
                 nxt = idx[:, :1].astype(jnp.int32)
                 margin = top2[..., 0] - top2[..., 1]
             active = (rem > 0).astype(jnp.int32)
-            return (nxt, cache, count + active, rem - active), (
-                nxt[:, 0], margin,
+            return (nxt, cache, count + active, rem - active, fault), (
+                nxt[:, 0], margin, fault,
             )
 
-        (tok, cache, count, rem), (toks, margins) = jax.lax.scan(
-            step, (state["tok"], cache, state["count"], state["rem"]),
+        (tok, cache, count, rem, fault), (toks, margins, faults) = jax.lax.scan(
+            step, (state["tok"], cache, state["count"], state["rem"],
+                   state["fault"]),
             None, length=burst,
         )
-        state = dict(state, tok=tok, count=count, rem=rem)
-        return cache, state, jnp.moveaxis(toks, 0, 1), jnp.moveaxis(margins, 0, 1)
+        state = dict(state, tok=tok, count=count, rem=rem, fault=fault)
+        return (cache, state, jnp.moveaxis(toks, 0, 1),
+                jnp.moveaxis(margins, 0, 1), jnp.moveaxis(faults, 0, 1))
 
     return decode_burst
 
@@ -299,6 +322,10 @@ class Request:
     max_new: int
     temperature: float = 0.0      # <= 0: greedy
     seed: Optional[int] = None    # PRNG stream seed; defaults to rid
+    # deadline in seconds from run entry; checked at the loop's existing host
+    # sync points (burst boundaries), so expiry granularity is one burst.
+    # None: no deadline (ResilienceConfig.default_deadline_s may fill it in)
+    deadline_s: Optional[float] = None
     generated: Optional[List[int]] = None
     margins: Optional[List[float]] = None  # top-2 logit margin per generated token
 
@@ -347,6 +374,21 @@ class BatchedServer:
     occupancy only, and ``self.spec_telemetry`` is the cycle-accounting
     authority.
 
+    ``resilience`` (a :class:`repro.resilience.ResilienceConfig`) switches
+    the server from fail-stop to shed/quarantine/degrade: oversized or empty
+    prompts and queue overflow are *shed* with structured reasons instead of
+    raising, per-request deadlines are enforced at burst boundaries, and
+    slots whose logits go non-finite are quarantined and evicted before
+    their state can corrupt a neighbor (the detection flag rides the burst
+    carry — zero extra host round-trips). Every request then ends in exactly
+    one ``self.outcomes[rid]`` :class:`~repro.resilience.RequestOutcome`;
+    ``run()`` still returns rid -> tokens (partial for expired/faulted, shed
+    requests excluded). ``resilience=None`` (default) keeps the legacy
+    contract byte-identical. ``injector`` (a
+    :class:`~repro.resilience.FaultInjector`) fires deterministic faults at
+    chosen decode rounds — test/benchmark instrumentation, never wired in
+    production.
+
     ``mesh`` serves tensor-parallel on a device mesh (axes from
     ``data``/``model``/``pod``): weights, KV cache, and slot state are placed
     once at construction with the logical-axis sharding rules and the jitted
@@ -369,6 +411,8 @@ ServingShardings` bundle (``partition.serving_sharding_report`` summarizes
     bank: Optional[object] = None        # repro.runtime.MultiPointBank
     mesh: Optional[object] = None        # jax.sharding.Mesh
     observer: Optional[object] = None    # repro.obs.ServingObserver
+    resilience: Optional[object] = None  # repro.resilience.ResilienceConfig
+    injector: Optional[object] = None    # repro.resilience.FaultInjector
 
     def __post_init__(self):
         if self.burst < 1:
@@ -408,6 +452,12 @@ ServingShardings` bundle (``partition.serving_sharding_report`` summarizes
         self.host_transfers = 0
         self._run_complete: Optional[bool] = None  # None: never ran
         self._seen_buckets = set()  # prefill shapes already compiled
+        # resilience accounting (per run, reset in _begin_run)
+        self.outcomes: Dict[int, object] = {}  # rid -> RequestOutcome
+        self._round_idx = 0
+        self._t0 = 0.0
+        self._fault_counts = {"shed": 0, "expired": 0, "faulted": 0,
+                              "deadline_misses": 0}
         # mesh serving: derive every placement once from the logical-axis
         # rules and commit weights / cache / slot state to the mesh. With
         # mesh=None nothing below runs — that path stays byte-identical.
@@ -529,61 +579,180 @@ ServingShardings` bundle (``partition.serving_sharding_report`` summarizes
         by an aborted prior run all start fresh on every invocation
         (``_begin_run``); ``snapshot()`` exports exactly the state one run
         accumulated, whether it completed or died mid-flight.
+
+        With ``resilience`` attached the fail-stop contract becomes
+        shed/quarantine/degrade: invalid or overflowing requests are shed
+        with structured reasons instead of raising, deadlines evict at burst
+        boundaries, faulted slots are quarantined, and every request ends in
+        exactly one ``self.outcomes[rid]``. The returned dict then carries
+        partial streams for expired/faulted requests and omits shed ones.
         """
-        for req in requests:  # reject before any state mutates
-            prompt = _checked_prompt(req)
-            scratch = self.spec.draft_len if self.spec is not None else 0
-            if len(prompt) + req.max_new + scratch > self.max_len:
-                extra = (f" + draft_len ({scratch})" if self.spec is not None
-                         else "")
-                why = (" — the verify forward needs draft_len rows of "
-                       "scratch headroom" if self.spec is not None else
-                       " — the KV cache would overflow mid-decode")
-                raise ValueError(
-                    f"request {req.rid}: prompt ({len(prompt)}) + max_new "
-                    f"({req.max_new}){extra} exceeds max_len "
-                    f"({self.max_len}){why}"
-                )
+        res = self.resilience
+        scratch = self.spec.draft_len if self.spec is not None else 0
+        shed_pre: List[Tuple[Request, str]] = []
+        admitted: List[Request] = []
+        for req in requests:  # reject/shed before any state mutates
+            if (res is not None and res.default_deadline_s is not None
+                    and req.deadline_s is None):
+                req.deadline_s = res.default_deadline_s
+            prompt = np.asarray(req.prompt, np.int32)
+            too_long = len(prompt) + req.max_new + scratch > self.max_len
+            if res is None:  # legacy fail-stop contract, byte-identical
+                _checked_prompt(req)
+                if too_long:
+                    extra = (f" + draft_len ({scratch})"
+                             if self.spec is not None else "")
+                    why = (" — the verify forward needs draft_len rows of "
+                           "scratch headroom" if self.spec is not None else
+                           " — the KV cache would overflow mid-decode")
+                    raise ValueError(
+                        f"request {req.rid}: prompt ({len(prompt)}) + max_new "
+                        f"({req.max_new}){extra} exceeds max_len "
+                        f"({self.max_len}){why}"
+                    )
+            elif prompt.size == 0:
+                shed_pre.append((req, "empty_prompt"))
+                continue
+            elif too_long:
+                shed_pre.append((req, "too_long"))
+                continue
+            admitted.append(req)
+        if res is not None and res.queue_limit is not None:
+            from repro.resilience.outcome import shed_overflow
+
+            admitted, dropped = shed_overflow(admitted, res.queue_limit,
+                                              res.shed_policy)
+            shed_pre.extend((r, "queue_full") for r in dropped)
         self._begin_run(requests)
         obs = self.observer
+        for req, reason in shed_pre:
+            self._shed(req, reason)
         aborted = True
         try:
-            queue = list(requests)
+            queue = list(admitted)
             results: Dict[int, List[int]] = {}
             slot_of: Dict[int, int] = {}
             free = list(range(self.slots))
+            shed_since = len(shed_pre)  # sheds since the last controller observe
             while queue or self.active:
+                if res is not None:  # shed queued work that can no longer win
+                    queue, n_shed = self._expire_queue(queue)
+                    shed_since += n_shed
                 while queue and free:
                     req = queue.pop(0)
                     slot = free.pop(0)
                     if obs is not None:
                         obs.request_admitted(req.rid, slot)
                     self._prefill_slot(slot, req)
+                    if (res is not None and res.fault_isolation
+                            and not math.isfinite(req.margins[0])):
+                        # non-finite prefill logits: the sampled token is
+                        # garbage — quarantine before anything is committed
+                        # (the slot's rows are reclaimed by the next scatter)
+                        req.generated, req.margins = [], []
+                        results[req.rid] = req.generated
+                        self._finish(req, "faulted", reason="prefill_nonfinite")
+                        free.append(slot)
+                        continue
                     if len(req.generated) >= req.max_new:  # prefill already done
                         results[req.rid] = req.generated
-                        if obs is not None:
-                            obs.request_completed(req.rid)
+                        self._finish(req, "ok")
                         free.append(slot)
                         continue
                     self.active[req.rid] = req
                     slot_of[req.rid] = slot
                 if not self.active:
                     continue
+                queue_depth, free_slots = len(queue), len(free)
                 if self.spec is not None:
-                    self._spec_round(slot_of, len(queue), len(free))
+                    summary = self._spec_round(slot_of)
                 else:
-                    self._burst_round(slot_of, len(queue), len(free))
-                done = [r for r, q in self.active.items() if len(q.generated) >= q.max_new]
+                    summary = self._burst_round(slot_of)
+                for rid in summary["faulted"]:  # quarantine at the boundary
+                    req = self.active.pop(rid)
+                    results[rid] = req.generated
+                    self._finish(req, "faulted", reason=summary["fault_reason"])
+                    free.append(slot_of.pop(rid))
+                misses = 0
+                if res is not None:
+                    now = time.perf_counter() - self._t0
+                    for rid, req in list(self.active.items()):
+                        if req.deadline_s is not None and now >= req.deadline_s:
+                            self.active.pop(rid)
+                            results[rid] = req.generated
+                            self._finish(req, "expired", reason="deadline")
+                            free.append(slot_of.pop(rid))
+                            misses += 1
+                done = [r for r, q in self.active.items()
+                        if len(q.generated) >= q.max_new]
                 for rid in done:
                     req = self.active.pop(rid)
                     results[rid] = req.generated
-                    if obs is not None:
-                        obs.request_completed(rid)
+                    self._finish(req, "ok")
                     free.append(slot_of.pop(rid))
+                if self.controller is not None:
+                    self._observe(summary["point"], summary["emitted"],
+                                  summary["steps"], queue_depth, free_slots,
+                                  summary["min_margin"],
+                                  deadline_misses=misses, shed=shed_since)
+                    shed_since = 0
             aborted = False
         finally:
             self._end_run(aborted)
         return results
+
+    # -- resilience: outcome bookkeeping --------------------------------------
+
+    def _finish(self, req: Request, status: str,
+                reason: Optional[str] = None) -> None:
+        """Record the terminal outcome of an admitted request."""
+        from repro.resilience.outcome import RequestOutcome
+
+        tokens = len(req.generated or [])
+        self.outcomes[req.rid] = RequestOutcome(
+            rid=req.rid, status=status, reason=reason, tokens=tokens,
+            deadline_s=req.deadline_s,
+            wall_s=time.perf_counter() - self._t0,
+        )
+        obs = self.observer
+        if status == "ok":
+            if obs is not None:
+                obs.request_completed(req.rid)
+        elif status == "expired":
+            self._fault_counts["expired"] += 1
+            self._fault_counts["deadline_misses"] += 1
+            if obs is not None:
+                obs.request_expired(req.rid, tokens)
+        else:
+            self._fault_counts["faulted"] += 1
+            if obs is not None:
+                obs.request_faulted(req.rid, tokens, reason)
+
+    def _shed(self, req: Request, reason: str) -> None:
+        """Record a rejected-at-admission request (never held a slot)."""
+        from repro.resilience.outcome import RequestOutcome
+
+        self.outcomes[req.rid] = RequestOutcome(
+            rid=req.rid, status="shed", reason=reason, tokens=0,
+            deadline_s=req.deadline_s,
+            wall_s=time.perf_counter() - self._t0,
+        )
+        self._fault_counts["shed"] += 1
+        if self.observer is not None:
+            self.observer.request_shed(req.rid, reason)
+
+    def _expire_queue(self, queue: List[Request]):
+        """Shed queued requests whose deadline already passed — admitting
+        them would burn prefill on work that cannot finish in time."""
+        now = time.perf_counter() - self._t0
+        kept, n_shed = [], 0
+        for req in queue:
+            if req.deadline_s is not None and now >= req.deadline_s:
+                self._shed(req, "deadline_expired")
+                n_shed += 1
+            else:
+                kept.append(req)
+        return kept, n_shed
 
     # -- run lifecycle: symmetric reset / export ------------------------------
 
@@ -596,6 +765,12 @@ ServingShardings` bundle (``partition.serving_sharding_report`` summarizes
         run's results or exported snapshots.
         """
         self.active.clear()
+        self.outcomes = {}
+        self._round_idx = 0
+        self._t0 = time.perf_counter()
+        self._fault_counts = {"shed": 0, "expired": 0, "faulted": 0,
+                              "deadline_misses": 0}
+        self._run_requests = list(requests)
         if self.telemetry is not None:
             self.telemetry.reset()
         if self.controller is not None:
@@ -614,6 +789,21 @@ ServingShardings` bundle (``partition.serving_sharding_report`` summarizes
 
     def _end_run(self, aborted: bool) -> None:
         self._run_complete = not aborted
+        if aborted:
+            # every request the run touched but never resolved gets an
+            # ``aborted`` outcome (with its partial token count), so a run
+            # that died mid-flight is still fully attributable from
+            # ``snapshot()``
+            from repro.resilience.outcome import RequestOutcome
+
+            wall = time.perf_counter() - self._t0
+            for req in getattr(self, "_run_requests", []):
+                if req.rid not in self.outcomes:
+                    self.outcomes[req.rid] = RequestOutcome(
+                        rid=req.rid, status="aborted",
+                        tokens=len(req.generated or []),
+                        deadline_s=req.deadline_s, wall_s=wall,
+                    )
         if self.observer is not None:
             self.observer.run_end(aborted, self.host_transfers,
                                   self._telemetry_records())
@@ -633,6 +823,13 @@ ServingShardings` bundle (``partition.serving_sharding_report`` summarizes
         if self.spec is not None:
             meta["draft_len"] = self.spec.draft_len
             meta["verify_point"] = self.spec.verify_point
+        if self.resilience is not None:
+            meta["resilience"] = {
+                "queue_limit": self.resilience.queue_limit,
+                "shed_policy": self.resilience.shed_policy,
+                "fault_isolation": self.resilience.fault_isolation,
+                "default_deadline_s": self.resilience.default_deadline_s,
+            }
         if self.shardings is not None:
             meta["sharding"] = partition.serving_sharding_report(self.shardings)
         engine = self._engine_cost_meta()
@@ -699,6 +896,11 @@ ServingShardings` bundle (``partition.serving_sharding_report`` summarizes
             "telemetry": self._telemetry_records(),
             "observability": (self.observer.snapshot()
                               if self.observer is not None else None),
+            "resilience": {
+                "outcomes": {rid: o.to_dict()
+                             for rid, o in self.outcomes.items()},
+                "counters": dict(self._fault_counts),
+            },
         }
 
     def collective_snapshot(self) -> Optional[Dict]:
@@ -722,7 +924,8 @@ ServingShardings` bundle (``partition.serving_sharding_report`` summarizes
             "collective_by_kind": costs.collective_by_kind,
         }
 
-    def _observe(self, point, tokens, steps, queue_depth, free_slots, min_margin):
+    def _observe(self, point, tokens, steps, queue_depth, free_slots,
+                 min_margin, deadline_misses=0, shed=0):
         from repro.runtime import StepSignals
 
         self.telemetry.record_burst(point, tokens=tokens, steps=steps,
@@ -733,6 +936,8 @@ ServingShardings` bundle (``partition.serving_sharding_report`` summarizes
             free_slots=free_slots,
             min_margin=min_margin,
             steps=steps,
+            deadline_misses=deadline_misses,
+            shed=shed,
         ))
 
     def _scope(self):
@@ -760,20 +965,31 @@ ServingShardings` bundle (``partition.serving_sharding_report`` summarizes
                 buf = sh.slots((self.slots, self.burst))  # emit buffers
                 sharding_kwargs = dict(
                     in_shardings=(None, sh.cache, sh.state),
-                    out_shardings=(sh.cache, sh.state, buf, buf),
+                    out_shardings=(sh.cache, sh.state, buf, buf, buf),
                 )
+            limit = (self.resilience.logit_limit
+                     if self.resilience is not None else None)
             self._burst_fns[sampled] = jax.jit(
                 make_decode_burst(self.model, self.ctx, self.burst,
-                                  sampled=sampled),
+                                  sampled=sampled, logit_limit=limit),
                 donate_argnums=(1, 2),
                 **sharding_kwargs,
             )
         return self._burst_fns[sampled]
 
-    def _burst_round(self, slot_of, queue_depth, free_slots):
+    def _burst_round(self, slot_of) -> Dict:
         """One decode burst over the active slots: ``burst`` scan steps on
-        device, one host transfer, per-slot budget clipping on the host."""
+        device, one host transfer, per-slot budget clipping on the host.
+
+        Returns the round summary the scheduler acts on: tokens emitted,
+        the executed point, the min margin over *clean* committed tokens,
+        and the rids whose lanes faulted (their commit is clipped to the
+        steps before the first bad logit; the scheduler quarantines them).
+        """
         obs = self.observer
+        if self.injector is not None:
+            self.injector.before_round(self, self._round_idx, slot_of)
+        self._round_idx += 1
         point = self.controller.point if self.controller is not None else None
         sampled = any(r.temperature > 0.0 for r in self.active.values())
         if obs is not None:
@@ -781,30 +997,45 @@ ServingShardings` bundle (``partition.serving_sharding_report`` summarizes
                 obs.compile_event("burst", sampled=sampled)
             obs.burst_begin(point)
         with self._scope():
-            self.cache, self._state, toks, margins = self.decode_burst(sampled)(
-                self._serving_tree(), self.cache, self._state,
-            )
-        toks, margins = jax.device_get((toks, margins))
+            self.cache, self._state, toks, margins, faults = (
+                self.decode_burst(sampled)(
+                    self._serving_tree(), self.cache, self._state,
+                ))
+        toks, margins, faults = jax.device_get((toks, margins, faults))
         self.host_transfers += 1
+        isolate = (self.resilience is not None
+                   and self.resilience.fault_isolation)
         emitted = 0
         burst_margins = []
         by_rid: Dict[int, List[int]] = {}
+        faulted: List[int] = []
         for rid, req in self.active.items():
             s = slot_of[rid]
             n = min(self.burst, req.max_new - len(req.generated))
+            if isolate and faults[s].any():
+                # the flag is cumulative: clean steps are the leading False
+                # run; everything from the first bad logit on is discarded
+                n = min(n, int((~faults[s]).sum()))
+                faulted.append(rid)
             by_rid[rid] = [int(t) for t in toks[s, :n]]
             req.generated.extend(by_rid[rid])
             req.margins.extend(float(m) for m in margins[s, :n])
             self._slot_start[s] += n
             emitted += n
-            burst_margins.append(float(margins[s, :n].min()))
+            if rid not in faulted:
+                burst_margins.append(float(margins[s, :n].min()))
         if obs is not None:
             obs.burst_end(point, self.burst, by_rid)
-        if self.controller is not None:
-            self._observe(point, emitted, self.burst, queue_depth, free_slots,
-                          min(burst_margins))
+        return {
+            "point": point,
+            "emitted": emitted,
+            "steps": self.burst,
+            "min_margin": min(burst_margins) if burst_margins else None,
+            "faulted": faulted,
+            "fault_reason": "decode_nonfinite",
+        }
 
-    def _spec_round(self, slot_of, queue_depth, free_slots):
+    def _spec_round(self, slot_of) -> Dict:
         """One draft-k-then-verify round over the active slots.
 
         Each active request gains between 1 (first draft rejected) and
@@ -812,24 +1043,46 @@ ServingShardings` bundle (``partition.serving_sharding_report`` summarizes
         ``max_new``; the KV cache comes back rolled back to the committed
         length per slot, and the device slot state (pending token, count) is
         re-synced in one fused update.
+
+        Fault handling (the spec abort path, flags from the verify step's
+        single host transfer): a *draft*-faulted lane already degraded to
+        plain accurate decode inside the verify step (zero accepts, accurate
+        correction token, accurate KV rewritten over the drafted scratch) —
+        it commits normally and stays admitted. A *verify*-faulted lane is
+        numerically unrecoverable: it commits nothing and the scheduler
+        quarantines it.
         """
         st = self._state
         obs = self.observer
+        if self.injector is not None:
+            self.injector.before_round(self, self._round_idx, slot_of)
+        self._round_idx += 1
         draft_point = self.controller.point if self.controller is not None else None
         if obs is not None:
             obs.burst_begin(draft_point or self.spec.default_draft_point,
                             kind="spec")
         with self._scope():
-            emitted, accepted, margins, self.cache, point = self.spec.round(
+            (emitted, accepted, margins, draft_fault, verify_fault,
+             self.cache, point) = self.spec.round(
                 st["tok"], self.cache, st["key"], st["count"], st["temp"],
                 self._slot_start, draft_point=draft_point,
             )
         self.host_transfers += 1
+        isolate = (self.resilience is not None
+                   and self.resilience.fault_isolation)
         accs, emits, round_margins = [], [], []
         by_rid: Dict[int, List[int]] = {}
+        faulted: List[int] = []
+        draft_faults: List[int] = []
         sync_slots, sync_toks, sync_counts = [], [], []
         for rid, req in self.active.items():
             s = slot_of[rid]
+            if isolate and bool(verify_fault[s]):
+                by_rid[rid] = []
+                faulted.append(rid)
+                continue
+            if isolate and bool(draft_fault[s]):
+                draft_faults.append(rid)
             n = min(int(accepted[s]) + 1, req.max_new - len(req.generated))
             by_rid[rid] = [int(t) for t in emitted[s, :n]]
             req.generated.extend(by_rid[rid])
@@ -842,17 +1095,27 @@ ServingShardings` bundle (``partition.serving_sharding_report`` summarizes
             sync_toks.append(int(emitted[s, n - 1]))
             sync_counts.append(len(req.generated))
         if obs is not None:
+            extra = {"draft_faults": draft_faults} if draft_faults else {}
             obs.burst_end(point, self.spec.draft_len + 1, by_rid, kind="spec",
-                          accepted=accs)
-        sl = jnp.asarray(sync_slots, jnp.int32)
-        self._state = dict(
-            st,
-            tok=st["tok"].at[sl].set(jnp.asarray(sync_toks, jnp.int32)[:, None]),
-            count=st["count"].at[sl].set(jnp.asarray(sync_counts, jnp.int32)),
-        )
-        self.spec.telemetry.record_round(point, self.spec.verify_point, accs, emits)
-        if self.controller is not None:
-            # a round executes draft_len single-token steps + one multi-token
-            # verify forward: that is what the budget EMA / decode_steps cover
-            self._observe(point, sum(emits), self.spec.draft_len + 1,
-                          queue_depth, free_slots, min(round_margins))
+                          accepted=accs, **extra)
+        if sync_slots:
+            sl = jnp.asarray(sync_slots, jnp.int32)
+            self._state = dict(
+                st,
+                tok=st["tok"].at[sl].set(
+                    jnp.asarray(sync_toks, jnp.int32)[:, None]),
+                count=st["count"].at[sl].set(
+                    jnp.asarray(sync_counts, jnp.int32)),
+            )
+        self.spec.telemetry.record_round(point, self.spec.verify_point, accs,
+                                         emits)
+        # a round executes draft_len single-token steps + one multi-token
+        # verify forward: that is what the budget EMA / decode_steps cover
+        return {
+            "point": point,
+            "emitted": sum(emits),
+            "steps": self.spec.draft_len + 1,
+            "min_margin": min(round_margins) if round_margins else None,
+            "faulted": faulted,
+            "fault_reason": "verify_nonfinite",
+        }

@@ -82,7 +82,8 @@ def make_verify_step(model: ModelApi, ctx: EngineContext, k: int):
 
     ``(tree, tokens (B,1), draft_tokens (B,k), draft_probs (B,k,V), cache,
     start (B,), base_keys, counts, temps, round_idx)`` ->
-    ``(emitted (B,k+1), accepted (B,), margins (B,k+1), cache)``.
+    ``(emitted (B,k+1), accepted (B,), margins (B,k+1), draft_fault (B,),
+    verify_fault (B,), cache)``.
 
     ``start`` is each slot's committed row count BEFORE drafting; the cache's
     index (advanced by the draft loop) is rewound to it so ``decode_step``
@@ -96,6 +97,17 @@ def make_verify_step(model: ModelApi, ctx: EngineContext, k: int):
     ``norm(max(p-q,0))``) or bonus (all accepted, sampled from the k-th
     accurate distribution) token. On exit the cache is rolled back to
     ``start + accepted + 1`` committed rows per slot.
+
+    Fault flags (the spec-round abort path): a slot whose *draft*
+    distributions went non-finite (``draft_fault``) has its whole draft
+    rejected and its correction token drawn from the accurate position-0
+    distribution — i.e. the lane degrades to plain accurate decode for this
+    round, and because the verify forward just rewrote the drafted scratch
+    rows with accurate KV, the slot continues cleanly. A slot whose *verify*
+    logits went non-finite (``verify_fault``) is numerically unrecoverable
+    here — the caller quarantines it. Both flags ride the round's single
+    host transfer; with finite inputs every flag is False and the emitted
+    math is bit-identical to the unflagged step.
     """
     from .rollback import with_cache_positions
 
@@ -115,11 +127,15 @@ def make_verify_step(model: ModelApi, ctx: EngineContext, k: int):
         )[..., 0]
         q_at = gather(draft_probs, draft_tokens)  # (B, k)
         p_at = gather(p[:, :k], draft_tokens)     # (B, k)
+        draft_fault = jnp.any(~jnp.isfinite(draft_probs), axis=(1, 2))  # (B,)
+        verify_fault = jnp.any(~jnp.isfinite(logits), axis=(1, 2))      # (B,)
         rkeys = _round_keys(base_keys, round_idx)
         u = jax.vmap(
             lambda key: jax.random.uniform(jax.random.fold_in(key, _ACCEPT_LANE), (k,))
         )(rkeys)
-        accept = u * q_at < p_at
+        # a faulted draft is rejected wholesale (NaN q_at would compare False
+        # anyway, but an Inf could sneak a draft token through)
+        accept = (u * q_at < p_at) & ~draft_fault[:, None]
         accepted = jnp.sum(jnp.cumprod(accept.astype(jnp.int32), axis=1), axis=1)
 
         # correction token: residual distribution at the first rejection,
@@ -132,6 +148,11 @@ def make_verify_step(model: ModelApi, ctx: EngineContext, k: int):
         # measure-zero guard: q == p makes the residual vanish; fall back to p
         resid_at = jnp.where(rsum > 0.0, resid_at / jnp.maximum(rsum, 1e-30), p_reject)
         dist = jnp.where((accepted == k)[:, None], p[:, k], resid_at)  # (B, V)
+        # draft-fault abort: the residual is NaN-contaminated (it subtracts
+        # the faulted draft probs), so the lane falls back to the accurate
+        # position-0 distribution — exactly what plain accurate decode of the
+        # pending token would have sampled from
+        dist = jnp.where(draft_fault[:, None], p[:, 0], dist)
         ckeys = jax.vmap(jax.random.fold_in)(_lane(rkeys, _CORRECT_LANE), counts + accepted)
         sampled = jax.vmap(jax.random.categorical)(ckeys, jnp.log(dist + 1e-30))
         correction = jnp.where(
@@ -148,6 +169,6 @@ def make_verify_step(model: ModelApi, ctx: EngineContext, k: int):
             jnp.where(pos == accepted[:, None], correction[:, None], 0),
         )
         cache = with_cache_positions(cache, start + accepted + 1)
-        return emitted, accepted, top2_margin(logits), cache
+        return emitted, accepted, top2_margin(logits), draft_fault, verify_fault, cache
 
     return verify

@@ -63,7 +63,7 @@ class SpeculativeDecoder:
             verify_kwargs = dict(
                 in_shardings=(None, None, None, None, c, None, None, None,
                               None, None),
-                out_shardings=(None, None, None, c),
+                out_shardings=(None, None, None, None, None, c),
             )
         self.draft_loop = jax.jit(
             make_draft_loop(model, ctx, self.cfg.draft_len), donate_argnums=(2,),
@@ -96,11 +96,14 @@ class SpeculativeDecoder:
 
         ``tokens`` (B,1) pending token per slot, ``start`` (B,) committed row
         counts, ``counts`` (B,) generated-token indices (PRNG folds). Returns
-        ``(emitted (B,k+1) np, accepted (B,) np, margins (B,k+1) np, cache)``
-        with the cache rolled back to ``start + accepted + 1`` rows per slot.
-        The three emit buffers come back in ONE host transfer; the cache stays
-        resident (and is donated through draft + verify — no copies). The
-        caller records telemetry (it knows which slots are active).
+        ``(emitted (B,k+1) np, accepted (B,) np, margins (B,k+1) np,
+        draft_fault (B,) np, verify_fault (B,) np, cache, point)`` with the
+        cache rolled back to ``start + accepted + 1`` rows per slot. The
+        emit and fault buffers come back in ONE host transfer; the cache
+        stays resident (and is donated through draft + verify — no copies).
+        The caller records telemetry (it knows which slots are active) and
+        acts on the fault flags (draft fault: the lane already degraded to
+        plain accurate decode this round; verify fault: quarantine).
         """
         point = draft_point or self.default_draft_point
         obs = self.observer
@@ -118,13 +121,14 @@ class SpeculativeDecoder:
         if obs is not None:
             obs.spec_stage_end("draft", point)
             obs.spec_stage_begin("verify", self.verify_point)
-        emitted, accepted, margins, cache = self.verify(
+        emitted, accepted, margins, draft_fault, verify_fault, cache = self.verify(
             self.bank.tree(self.verify_point), tokens, draft_toks, draft_probs,
             cache, start, base_keys, counts, temps, round_idx,
         )
         if obs is not None:
             obs.spec_stage_end("verify", self.verify_point)
-        emitted, accepted, margins = jax.device_get((emitted, accepted, margins))
+        emitted, accepted, margins, draft_fault, verify_fault = jax.device_get(
+            (emitted, accepted, margins, draft_fault, verify_fault))
         if obs is not None:
             obs.spec_commit(accepted)
-        return emitted, accepted, margins, cache, point
+        return emitted, accepted, margins, draft_fault, verify_fault, cache, point

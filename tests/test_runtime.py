@@ -226,6 +226,64 @@ def test_controller_rejects_unknown_points():
         ModeController(_toy_bank(), ControllerConfig(pin="fp4"))
 
 
+from _hypothesis_compat import given, settings, st  # noqa: E402
+
+_margins = st.one_of(
+    st.none(),
+    st.floats(min_value=-1e6, max_value=1e6, allow_nan=False),
+    st.sampled_from([float("nan"), float("inf"), float("-inf")]),
+)
+
+
+@given(
+    margins=st.lists(_margins, min_size=1, max_size=40),
+    queue_depth=st.integers(min_value=0, max_value=8),
+    free_slots=st.integers(min_value=0, max_value=4),
+    steps=st.integers(min_value=1, max_value=16),
+)
+@settings(max_examples=60, deadline=None)
+def test_controller_robust_to_hostile_margins(margins, queue_depth,
+                                              free_slots, steps):
+    """Property (fault tolerance): arbitrary margin streams — including
+    NaN/Inf from a faulted lane — never crash the controller, never drive
+    a promotion off a non-finite margin, and keep the cycle EMA finite."""
+    import math
+
+    ctl = ModeController(
+        _toy_bank(),
+        ControllerConfig(margin_promote=1.5, margin_demote=6.0, hysteresis=1),
+    )
+    for m in margins:
+        before = ctl.bank.index(ctl.point)
+        ctl.observe(StepSignals(active=1, queue_depth=queue_depth,
+                                free_slots=free_slots, min_margin=m,
+                                steps=steps))
+        after = ctl.bank.index(ctl.point)
+        assert math.isfinite(ctl.rel_cycles_ema)
+        if m is not None and not math.isfinite(m):
+            # a non-finite margin must never read as "uncertain": the only
+            # legal move it can contribute to is a demotion (pressure/budget)
+            assert after <= before
+
+
+@given(margins=st.lists(_margins, min_size=1, max_size=40))
+@settings(max_examples=30, deadline=None)
+def test_controller_nonfinite_margins_never_promote(margins):
+    """With every margin non-finite or None, the ladder index is
+    monotonically non-increasing — garbage can only demote."""
+    hostile = [m for m in margins] or [float("nan")]
+    ctl = ModeController(_toy_bank(), ControllerConfig(hysteresis=1))
+    idx = ctl.bank.index(ctl.point)
+    for m in hostile:
+        bad = float("nan") if m is None else (
+            m if m != m or m in (float("inf"), float("-inf")) else float("inf"))
+        ctl.observe(StepSignals(active=1, queue_depth=0, free_slots=2,
+                                min_margin=bad))
+        new = ctl.bank.index(ctl.point)
+        assert new <= idx
+        idx = new
+
+
 # ---------------------------------------------------------------------------
 # telemetry
 # ---------------------------------------------------------------------------

@@ -175,13 +175,33 @@ def test_mid_burst_max_new_clipping(olmo):
 
 def test_rejects_requests_exceeding_cache_rows(olmo):
     """prompt + max_new beyond max_len is rejected up front — the KV write
-    index would clamp onto the last row mid-decode and corrupt output."""
+    index would clamp onto the last row mid-decode and corrupt output.
+
+    This is the legacy (resilience=None) fail-stop contract; with a
+    ResilienceConfig the same request is shed with reason ``too_long``
+    instead (tests/test_resilience.py)."""
     cfg, model, params = olmo
     server = BatchedServer(model, EXACT, params, slots=1, max_len=16, burst=8)
     with pytest.raises(ValueError, match="exceeds max_len"):
         server.run([Request(0, np.arange(12, dtype=np.int32) % cfg.vocab_size, 8)])
     with pytest.raises(ValueError, match="exceeds max_len"):  # prompt alone too long
         server.run([Request(0, np.arange(20, dtype=np.int32) % cfg.vocab_size, 1)])
+
+
+def test_oversized_request_shed_when_resilient(olmo):
+    """Same oversized request, resilient server: shed with a structured
+    reason, batch unharmed, nothing raises."""
+    from repro.resilience import ResilienceConfig
+
+    cfg, model, params = olmo
+    server = BatchedServer(model, EXACT, params, slots=1, max_len=16, burst=8,
+                           resilience=ResilienceConfig())
+    ok = Request(1, np.arange(3, dtype=np.int32) % cfg.vocab_size, 4)
+    out = server.run(
+        [Request(0, np.arange(12, dtype=np.int32) % cfg.vocab_size, 8), ok])
+    assert server.outcomes[0].status == "shed"
+    assert server.outcomes[0].reason == "too_long"
+    assert 0 not in out and len(out[1]) == 4
 
 
 def test_host_transfers_shrink_with_burst(olmo):
