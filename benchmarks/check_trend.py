@@ -19,6 +19,11 @@ case is surfaced in the report (median printed per file) but not gated.
 
 Files missing on either side (new benchmarks, removed ones) are reported
 and skipped, not failed — the gate compares only paths present in both.
+Skips are always *with notice*: a brand-new ``BENCH_*.json`` (no committed
+baseline yet — the state every PR that lands a new benchmark creates), new
+metric paths inside an existing file, and a git lookup that cannot run at
+all are each printed and tallied in the final summary, so "nothing gated"
+is visible rather than a silent pass.
 """
 from __future__ import annotations
 
@@ -83,13 +88,28 @@ def compare_records(fresh: Dict, baseline: Dict, *,
     return regressions, median
 
 
+def new_paths(fresh: Dict, baseline: Dict) -> List[str]:
+    """Metric paths present in ``fresh`` but absent from ``baseline`` — new
+    configs inside an existing benchmark file. They cannot be gated (nothing
+    to compare against), so the caller reports them instead of letting them
+    vanish silently."""
+    base_m = dict(collect_tok_s(baseline))
+    return [p for p, _ in collect_tok_s(fresh) if p not in base_m]
+
+
 def _baseline_json(ref: str, repo_path: str) -> Optional[Dict]:
-    """The committed copy of ``repo_path`` at ``ref`` (None if absent)."""
-    proc = subprocess.run(
-        ["git", "show", f"{ref}:{repo_path}"],
-        capture_output=True, text=True,
-        cwd=os.path.dirname(os.path.abspath(BENCH_DIR)),
-    )
+    """The committed copy of ``repo_path`` at ``ref`` (None if absent or if
+    git itself cannot run — both are skip-with-notice, never a crash)."""
+    try:
+        proc = subprocess.run(
+            ["git", "show", f"{ref}:{repo_path}"],
+            capture_output=True, text=True,
+            cwd=os.path.dirname(os.path.abspath(BENCH_DIR)),
+        )
+    except OSError as e:
+        print(f"check_trend: git show {ref}:{repo_path} could not run "
+              f"({e}) — treating as no baseline")
+        return None
     if proc.returncode != 0:
         return None
     try:
@@ -115,6 +135,8 @@ def main(argv=None) -> None:
         return
 
     failures = []
+    skipped: List[str] = []
+    gated = 0
     for path in fresh_paths:
         name = os.path.basename(path)
         with open(path) as f:
@@ -126,14 +148,25 @@ def main(argv=None) -> None:
         baseline = _baseline_json(args.baseline_ref,
                                   f"artifacts/bench/{name}")
         if baseline is None:
-            print(f"check_trend: {name}: no committed baseline at "
-                  f"{args.baseline_ref} (new benchmark?) — skipped")
+            print(f"check_trend: NOTICE {name}: no committed baseline at "
+                  f"{args.baseline_ref} (new benchmark?) — skipped, will be "
+                  "gated once this file is committed")
+            skipped.append(f"{name} (no baseline)")
             continue
+        fresh_only = new_paths(fresh, baseline)
+        if fresh_only:
+            sample = ", ".join(fresh_only[:3])
+            print(f"check_trend: NOTICE {name}: {len(fresh_only)} new metric "
+                  f"path(s) with no committed baseline (e.g. {sample}) — "
+                  "not gated until committed")
         regressions, median = compare_records(fresh, baseline,
                                               tolerance=args.tolerance)
         if median is None:
-            print(f"check_trend: {name}: no common tok_s metrics — skipped")
+            print(f"check_trend: NOTICE {name}: no common tok_s metrics — "
+                  "skipped")
+            skipped.append(f"{name} (no common metrics)")
             continue
+        gated += 1
         print(f"check_trend: {name}: "
               f"{len(dict(collect_tok_s(fresh)))} metrics, "
               f"median fresh/baseline ratio {median:.3f}, "
@@ -147,8 +180,9 @@ def main(argv=None) -> None:
     if failures:
         print("FAIL:", "; ".join(failures))
         sys.exit(1)
-    print("check_trend: no per-config tok/s regressions beyond "
-          f"{args.tolerance:.0%}")
+    note = f", {len(skipped)} file(s) skipped with notice" if skipped else ""
+    print(f"check_trend: no per-config tok/s regressions beyond "
+          f"{args.tolerance:.0%} ({gated} file(s) gated{note})")
 
 
 if __name__ == "__main__":

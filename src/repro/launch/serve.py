@@ -39,6 +39,22 @@ degrade, with a per-request outcome summary printed at the end::
     # graceful degradation: under deadline misses / queue pressure the whole
     # batch demotes down the CORDIC depth ladder before anything is shed
     ... --adaptive --deadline-ms 500 --degrade
+
+Streaming frontend (``repro.serve.frontend``, see ``docs/serving.md``) —
+``--frontend`` serves the synthetic workload through the continuous-batching
+scheduler instead of ``run()``: requests arrive over time (``--arrival-rate``
+req/s, seeded Poisson; 0 = all at once), admission/eviction/shed sweeps run
+every tick, and prefill is chunked to ``--chunk-tokens`` rows per tick so a
+long prompt never stalls decoding slots for more than one chunk budget
+(``--monolithic-prefill`` disables chunking, the A/B contrast). Deadlines
+become submit-relative. Two live drivers ride the same scheduler::
+
+    # JSONL requests on stdin -> streamed {"rid", "token"} JSONL on stdout
+    echo '{"rid": 0, "prompt": [5, 17, 3], "max_new": 8}' | \
+        ... --stdin-requests
+
+    # minimal HTTP service: POST /generate {"prompt": [...], "max_new": N}
+    ... --http-port 8080
 """
 from __future__ import annotations
 
@@ -77,6 +93,202 @@ def resolve_policy(args, model, params, fmt) -> PrecisionPolicy:
         policy.save(args.save_policy)
         print(f"policy saved to {args.save_policy}")
     return policy
+
+
+def _frontend_config(args):
+    from repro.serve.frontend import FrontendConfig
+
+    return FrontendConfig(chunk_tokens=args.chunk_tokens,
+                          monolithic_prefill=args.monolithic_prefill)
+
+
+def _serve_synthetic(args, server, reqs):
+    """The synthetic workload through the scheduler, ticked on this thread:
+    a seeded arrival process decides *when* each request is submitted, and
+    between arrivals the scheduler keeps admitting/prefilling/decoding."""
+    from repro.serve.frontend import ContinuousScheduler
+
+    rng = np.random.default_rng(args.arrival_seed)
+    if args.arrival_rate > 0:
+        arrive = np.cumsum(rng.exponential(1.0 / args.arrival_rate,
+                                           size=len(reqs)))
+    else:
+        arrive = np.zeros(len(reqs))
+    pending = list(zip(arrive.tolist(), reqs))
+    sched = ContinuousScheduler(server, _frontend_config(args))
+    with sched:
+        t0 = time.perf_counter()
+        while pending or not sched.idle:
+            now = time.perf_counter() - t0
+            while pending and pending[0][0] <= now:
+                sched.submit(pending.pop(0)[1])
+            if not sched.step() and pending:
+                # idle but arrivals remain: sleep until the next one is due
+                time.sleep(min(0.01, max(0.0, pending[0][0] - now)))
+        results = dict(sched.results)
+    print(f"frontend: ticks={sched.stats['ticks']} "
+          f"bursts={sched.stats['bursts']} "
+          f"prefill_rows={sched.stats['prefill_rows']} "
+          f"max_prefill_rows_between_bursts="
+          f"{sched.stats['max_prefill_rows_between_bursts']} "
+          f"(chunk budget {args.chunk_tokens})")
+    return results
+
+
+def _serve_stdin(args, server):
+    """JSONL requests on stdin, streamed JSONL tokens on stdout. Each line
+    in is one request; each token lands as its own line out, then a final
+    ``done`` line with the outcome status."""
+    import sys
+    import threading
+
+    from repro.serve.frontend import AsyncFrontend
+
+    fe = AsyncFrontend(server, _frontend_config(args)).start()
+    results = {}
+    out_lock = threading.Lock()
+
+    def pump(handle):
+        for tok in handle:
+            with out_lock:
+                print(json.dumps({"rid": handle.rid, "token": int(tok)}),
+                      flush=True)
+        with out_lock:
+            print(json.dumps({"rid": handle.rid, "done": True,
+                              "status": handle.status or "ok",
+                              "tokens": len(handle.tokens)}), flush=True)
+            results[handle.rid] = list(handle.tokens)
+
+    pumps = []
+    auto_rid = 0
+    try:
+        for line in sys.stdin:
+            line = line.strip()
+            if not line:
+                continue
+            d = json.loads(line)
+            rid = int(d.get("rid", auto_rid))
+            auto_rid = max(auto_rid, rid) + 1
+            req = Request(
+                rid, np.asarray(d["prompt"], np.int32),
+                int(d.get("max_new", args.max_new)),
+                temperature=float(d.get("temperature", args.temperature)),
+                seed=d.get("seed", args.seed),
+                deadline_s=d.get("deadline_s"),
+            )
+            try:
+                handle = fe.submit(req)
+            except ValueError as e:
+                with out_lock:
+                    print(json.dumps({"rid": rid, "done": True,
+                                      "status": "rejected",
+                                      "error": str(e)}), flush=True)
+                continue
+            t = threading.Thread(target=pump, args=(handle,), daemon=True)
+            t.start()
+            pumps.append(t)
+        for t in pumps:
+            t.join()
+    finally:
+        fe.stop()
+    return results
+
+
+def _serve_http(args, server):
+    """Minimal stdlib HTTP service over the async frontend. One endpoint:
+    POST /generate with ``{"prompt": [...], "max_new": N, ...}`` blocks
+    until the request settles and returns the full token stream (a broken
+    connection mid-wait cancels the request — client disconnect maps to
+    eviction at the next tick). GET /healthz for liveness."""
+    import itertools
+    import select
+    import socket
+    import threading
+    from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+
+    from repro.serve.frontend import AsyncFrontend
+
+    fe = AsyncFrontend(server, _frontend_config(args)).start()
+    results = {}
+    counter = itertools.count()
+    lock = threading.Lock()
+
+    class Handler(BaseHTTPRequestHandler):
+        def log_message(self, *a):  # keep stdout for the serving summary
+            pass
+
+        def do_GET(self):
+            if self.path != "/healthz":
+                self.send_error(404)
+                return
+            self._reply(200, {"ok": True})
+
+        def do_POST(self):
+            if self.path != "/generate":
+                self.send_error(404)
+                return
+            n = int(self.headers.get("Content-Length", 0))
+            try:
+                d = json.loads(self.rfile.read(n) or b"{}")
+                with lock:
+                    rid = int(d.get("rid", next(counter) + 100000))
+                req = Request(
+                    rid, np.asarray(d["prompt"], np.int32),
+                    int(d.get("max_new", args.max_new)),
+                    temperature=float(d.get("temperature", args.temperature)),
+                    seed=d.get("seed", args.seed),
+                    deadline_s=d.get("deadline_s"),
+                )
+                handle = fe.submit(req)
+            except (KeyError, ValueError, TypeError,
+                    json.JSONDecodeError) as e:
+                self._reply(400, {"error": str(e)})
+                return
+            # block until settled, but watch the socket: a client that
+            # disconnects mid-generation cancels the request (eviction at
+            # the next tick, partial tokens kept, outcome ``aborted``)
+            while not handle._done.wait(0.25):
+                readable, _, _ = select.select([self.connection], [], [], 0)
+                if readable and not self.connection.recv(1, socket.MSG_PEEK):
+                    handle.cancel()
+                    handle._done.wait(5.0)
+                    return
+            toks = list(handle.tokens)
+            with lock:
+                results[rid] = toks
+            self._reply(200, {"rid": rid, "tokens": toks,
+                              "status": handle.status or "ok"})
+
+        def _reply(self, code, payload):
+            body = json.dumps(payload).encode()
+            try:
+                self.send_response(code)
+                self.send_header("Content-Type", "application/json")
+                self.send_header("Content-Length", str(len(body)))
+                self.end_headers()
+                self.wfile.write(body)
+            except (BrokenPipeError, ConnectionResetError):
+                pass  # client went away; the request already settled
+
+    srv = ThreadingHTTPServer(("127.0.0.1", args.http_port), Handler)
+    print(f"serving on http://127.0.0.1:{args.http_port} "
+          "(POST /generate, GET /healthz); Ctrl-C to stop", flush=True)
+    try:
+        srv.serve_forever()
+    except KeyboardInterrupt:
+        print("\nshutting down")
+    finally:
+        srv.server_close()
+        fe.stop()
+    return results
+
+
+def _serve_frontend(args, server, reqs):
+    if args.http_port:
+        return _serve_http(args, server)
+    if args.stdin_requests:
+        return _serve_stdin(args, server)
+    return _serve_synthetic(args, server, reqs)
 
 
 def main(argv=None):
@@ -176,6 +388,36 @@ def main(argv=None):
     obs_args.add_argument("--profile", default=None, metavar="DIR",
                           help="wrap the run in a jax.profiler trace "
                                "(XLA-level; complements the serve trace)")
+    fe_args = ap.add_argument_group(
+        "streaming frontend",
+        "continuous-batching scheduler (repro.serve.frontend): requests "
+        "arrive over time, admission/eviction sweeps run every tick, prefill "
+        "is chunked so long prompts never stall decoding slots")
+    fe_args.add_argument("--frontend", action="store_true",
+                         help="serve the synthetic workload through the "
+                              "continuous-batching scheduler instead of "
+                              "run() (deadlines become submit-relative)")
+    fe_args.add_argument("--chunk-tokens", type=int, default=32,
+                         help="prefill budget: prompt rows advanced per "
+                              "admission tick (bounds how long a newly "
+                              "admitted prompt can stall decoding slots)")
+    fe_args.add_argument("--monolithic-prefill", action="store_true",
+                         help="disable chunking: prefill whole prompts in "
+                              "one tick (the A/B contrast arm)")
+    fe_args.add_argument("--arrival-rate", type=float, default=0.0,
+                         help="--frontend: synthetic request arrivals per "
+                              "second (seeded Poisson process; 0 = all "
+                              "submitted at once)")
+    fe_args.add_argument("--arrival-seed", type=int, default=0,
+                         help="--frontend: seed for the arrival process")
+    fe_args.add_argument("--stdin-requests", action="store_true",
+                         help="read JSONL requests from stdin "
+                              '({"rid", "prompt", "max_new", ...}) and '
+                              'stream {"rid", "token"} JSONL to stdout')
+    fe_args.add_argument("--http-port", type=int, default=None,
+                         help="serve a minimal HTTP API on 127.0.0.1: "
+                              "POST /generate with a JSON request body; "
+                              "Ctrl-C to stop")
     args = ap.parse_args(argv)
 
     mesh = None
@@ -305,11 +547,19 @@ def main(argv=None):
         )
         for i in range(args.requests)
     ]
+    use_frontend = args.frontend or args.stdin_requests or args.http_port
+    if use_frontend and mesh is not None:
+        raise SystemExit("the streaming frontend is single-device for now: "
+                         "drop --mesh or drop --frontend/--stdin-requests/"
+                         "--http-port")
     if args.profile:
         jax.profiler.start_trace(args.profile)
     t0 = time.time()
     try:
-        results = server.run(reqs)
+        if use_frontend:
+            results = _serve_frontend(args, server, reqs)
+        else:
+            results = server.run(reqs)
     finally:
         if args.profile:
             jax.profiler.stop_trace()

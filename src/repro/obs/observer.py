@@ -10,9 +10,15 @@ overhead is bounded in CI (``bench_serving --smoke``'s ≤5% tok/s gate).
 SLO metrics recorded per request (histograms, p50/p90/p99 in the snapshot):
 
 =================== ========================================================
-``queue_wait_s``     run entry -> slot admission
-``ttft_s``           run entry -> first token (time-to-first-token)
+``queue_wait_s``     submission -> leaving the queue, by slot admission OR
+                     by shed (a shed request still waited; excluding sheds
+                     would bias p99 optimistically under heavy shedding)
+``ttft_s``           submission -> first token (time-to-first-token). Batch
+                     ``run()`` submits everything at run entry; the
+                     streaming frontend stamps true per-request submit times
 ``prefill_s``        admission -> prefill return (one jitted call, synced)
+``prefill_chunk_s``  one chunk of a chunked streaming prefill (these replace
+                     the monolithic ``prefill`` span on the frontend path)
 ``intertoken_s``     burst-amortized inter-token latency: a burst that lands
                      ``n`` tokens ``dt`` after the request's previous
                      emission observes ``dt/n`` with weight ``n``
@@ -21,8 +27,9 @@ SLO metrics recorded per request (histograms, p50/p90/p99 in the snapshot):
 ``tokens_per_request`` / ``request_tok_s``  per-request totals at completion
 =================== ========================================================
 
-plus counters (requests, tokens, prefill_tokens, bursts, spec_rounds,
-decode_steps, host_transfers, controller_switches, compiles, evicted) and
+plus counters (requests, tokens, prefill_tokens, prefill_chunks, bursts,
+spec_rounds, decode_steps, host_transfers, controller_switches, compiles,
+evicted, cancelled, admission_ticks) and
 run-level gauges (``run_wall_s``, ``tok_s``, ``acceptance_rate`` under
 speculation). ``observer.trace`` (optional) records the structured event
 timeline documented in :mod:`repro.obs.trace`.
@@ -86,19 +93,28 @@ class ServingObserver:
         self.requests = {}
         self._span_t0 = {}
         self.aborted = None
-        now = self._now()
         if self.trace is not None:
             self.trace.attach("run", meta)
             self.trace.begin("run", track="run", **meta)
         for req in requests:
-            self.requests[req.rid] = _ReqState(
-                submit=now, prompt_len=len(req.prompt), max_new=req.max_new)
-            if self.trace is not None:
-                self.trace.instant("request_submitted", track="sched",
-                                   rid=req.rid, prompt_len=len(req.prompt),
-                                   max_new=req.max_new)
-        if self.metrics is not None:
-            self.metrics.inc("requests", len(self.requests))
+            self.request_submitted(req.rid, len(req.prompt), req.max_new)
+
+    def request_submitted(self, rid: int, prompt_len: int, max_new: int,
+                          wall_ts: Optional[float] = None) -> None:
+        """Register one arrival. ``run_begin`` calls this for the whole batch
+        (the ``run()`` contract: the list arrives at entry); the streaming
+        frontend calls it per submission at scheduler intake, passing
+        ``wall_ts`` — the raw clock reading stamped on the submitting thread
+        — so queue-wait and TTFT anchor at the true submit time, not at the
+        tick that first saw the request."""
+        now = self._at(wall_ts)
+        self.requests[rid] = _ReqState(
+            submit=now, prompt_len=prompt_len, max_new=max_new)
+        self._count("requests")
+        if self.trace is not None:
+            self.trace.instant("request_submitted", track="sched",
+                               rid=rid, prompt_len=prompt_len,
+                               max_new=max_new)
 
     def run_end(self, aborted: bool, host_transfers: int,
                 telemetry: Optional[List[Dict]] = None) -> None:
@@ -147,6 +163,12 @@ class ServingObserver:
         st = self.requests.get(rid)
         if st is not None:
             st.done = self._now()
+            # a shed request still waited: its time in the queue contributes
+            # to the queue_wait histogram (submission -> leaving the queue,
+            # by admission OR by shed). Excluding sheds would bias p99
+            # optimistically under heavy shedding — exactly the long-waiting
+            # requests a deadline sweep rejects would vanish from the tail.
+            self._observe("queue_wait_s", st.done - st.submit)
         self._count("shed")
         self._count(f"shed_{reason}")
         if self.trace is not None:
@@ -203,17 +225,72 @@ class ServingObserver:
     def prefill_end(self, rid: int, prompt_len: int,
                     point: Optional[str]) -> None:
         now = self._now()
+        self._observe("prefill_s", now - self._span_t0.pop("prefill", now))
+        if self.trace is not None:
+            self.trace.end("prefill", track="engine", rid=rid)
+        self._prefilled(rid, prompt_len, point, now)
+
+    def _prefilled(self, rid: int, prompt_len: int, point: Optional[str],
+                   now: float) -> None:
+        """Shared prefill-completion accounting: first token committed."""
         st = self.requests[rid]
         st.first_tok = st.last_emit = now
         st.tokens = 1
-        self._observe("prefill_s", now - self._span_t0.pop("prefill", now))
         self._observe("ttft_s", now - st.submit)
         self._count("prefill_tokens", prompt_len)
         self._count("tokens")
         if self.trace is not None:
-            self.trace.end("prefill", track="engine", rid=rid)
             self.trace.instant("request_prefilled", track=_slot_track(st),
                                rid=rid, prompt_len=prompt_len, point=point)
+
+    def prefill_chunk_begin(self, rid: int, start: int, n: int, bucket: int,
+                            point: Optional[str]) -> None:
+        """One chunk of a chunked (streaming-frontend) prefill: ``n`` prompt
+        rows from offset ``start``, padded to ``bucket``. Chunks appear
+        instead of the monolithic ``prefill`` span for chunk-prefilled
+        requests; the final chunk's end also fires the ``request_prefilled``
+        accounting via :meth:`prefill_chunk_end`."""
+        self._span_t0["prefill_chunk"] = self._now()
+        if self.trace is not None:
+            self.trace.begin("prefill_chunk", track="engine", rid=rid,
+                             start=start, n=n, bucket=bucket, point=point)
+
+    def prefill_chunk_end(self, rid: int, final: bool,
+                          prompt_len: Optional[int] = None,
+                          point: Optional[str] = None) -> None:
+        now = self._now()
+        self._observe("prefill_chunk_s",
+                      now - self._span_t0.pop("prefill_chunk", now))
+        self._count("prefill_chunks")
+        if self.trace is not None:
+            self.trace.end("prefill_chunk", track="engine", rid=rid,
+                           final=final)
+        if final:
+            self._prefilled(rid, prompt_len, point, now)
+
+    def admission_tick(self, queued: int, active: int, free: int) -> None:
+        """One streaming-frontend scheduler tick (admission + shed sweeps +
+        at most one chunk budget of prefill + one burst)."""
+        self._count("admission_ticks")
+        if self.trace is not None:
+            self.trace.instant("admission_tick", track="sched", queued=queued,
+                               active=active, free=free)
+
+    def request_cancelled(self, rid: int, tokens: int) -> None:
+        """The client cancelled / disconnected: the request leaves at the
+        next tick boundary with ``tokens`` partial tokens (0 if it was still
+        queued or mid-prefill)."""
+        st = self.requests.get(rid)
+        self._count("cancelled")
+        if st is None:
+            return
+        st.done = self._now()
+        if self.trace is not None:
+            self.trace.instant("request_cancelled", track=_slot_track(st),
+                               rid=rid, tokens=tokens)
+            if st.admit is not None:
+                self.trace.end(f"request:{rid}", track=_slot_track(st),
+                               rid=rid, tokens=tokens)
 
     def compile_event(self, what: str, **args) -> None:
         """A new XLA program is about to be built (first visit to a prefill
@@ -330,6 +407,13 @@ class ServingObserver:
     def _now(self) -> float:
         return self.trace.now() if self.trace is not None else (
             self._clock())
+
+    def _at(self, wall_ts: Optional[float]) -> float:
+        """Map a raw clock reading onto the observer's time base (trace time
+        when a trace is attached); ``None`` means "now"."""
+        if wall_ts is None:
+            return self._now()
+        return self.trace.at(wall_ts) if self.trace is not None else wall_ts
 
     def _observe(self, name: str, v: float, n: int = 1) -> None:
         if self.metrics is not None:

@@ -71,6 +71,12 @@ class TraceRecorder:
         """Seconds since recorder creation (the trace time base)."""
         return self._clock() - self._t0
 
+    def at(self, clock_value: float) -> float:
+        """Convert a raw reading of the recorder's clock into trace time —
+        how streaming submit timestamps (stamped on the caller's thread)
+        land on the same time base as every other event."""
+        return clock_value - self._t0
+
     def attach(self, key: str, value) -> None:
         """Attach a header field (sharding report, collective bytes, ...)."""
         self.header[key] = value

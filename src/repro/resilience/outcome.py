@@ -14,7 +14,9 @@ touches ends in exactly one structured :class:`RequestOutcome`:
              evicted at the burst boundary so its slot state never corrupts
              neighbors (clean tokens committed before the fault are kept)
 ``aborted``  the run itself died mid-flight (filled in by ``_end_run`` so a
-             crashed run is still fully attributable)
+             crashed run is still fully attributable), or — on the streaming
+             frontend — the client cancelled / disconnected (reason
+             ``cancelled``, partial tokens kept)
 =========== ================================================================
 
 :class:`ResilienceConfig` switches the server from the legacy fail-stop
@@ -106,7 +108,8 @@ class ResilienceConfig:
             )
 
 
-def shed_overflow(queue: List, limit: int, policy: str) -> Tuple[List, List]:
+def shed_overflow(queue: List, limit: int, policy: str,
+                  deadline_of=None) -> Tuple[List, List]:
     """Shrink ``queue`` to ``limit`` requests; returns ``(kept, shed)``.
 
     ``kept`` preserves arrival order (admission fairness is FIFO among the
@@ -118,7 +121,13 @@ def shed_overflow(queue: List, limit: int, policy: str) -> Tuple[List, List]:
     * ``deadline_aware`` — drop the requests with the least deadline slack
       first (they are the least likely to finish in time anyway; requests
       without a deadline have infinite slack and shed last).
+
+    ``deadline_of`` lets the caller supply resolved deadlines (e.g. the
+    server's run-local resolution of ``default_deadline_s``) instead of the
+    raw ``request.deadline_s`` field the request happens to carry.
     """
+    if deadline_of is None:
+        deadline_of = lambda r: r.deadline_s
     if len(queue) <= limit:
         return list(queue), []
     if policy == "reject_newest":
@@ -131,7 +140,8 @@ def shed_overflow(queue: List, limit: int, policy: str) -> Tuple[List, List]:
         order = sorted(
             range(len(queue)),
             key=lambda i: (
-                queue[i].deadline_s if queue[i].deadline_s is not None else inf,
+                deadline_of(queue[i]) if deadline_of(queue[i]) is not None
+                else inf,
                 i,
             ),
         )

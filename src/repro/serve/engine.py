@@ -248,6 +248,79 @@ def make_decode_burst(model: ModelApi, ctx: EngineContext, burst: int,
     return decode_burst
 
 
+def make_prefill_chunk(model: ModelApi, ctx: EngineContext):
+    """One chunked-prefill step for attention/MLA families.
+
+    ``(tree, row, last, tokens (1, Cb), start, clen) -> (row, last (1, V))``.
+    ``row`` is the request's PRIVATE single-row cache with its write index at
+    ``start`` (the prompt rows committed by earlier chunks); ``tokens`` is
+    the next ``clen`` prompt rows padded to a pow2 bucket ``Cb``. The chunk
+    runs ONE S=Cb decode forward — each query attends the committed rows
+    plus its own chunk prefix under the per-query-causal mask, exactly the
+    key set the monolithic prefill's single forward gives it — then the
+    write index rewinds to ``start + clen`` so the padded tail is invisible
+    scratch, reclaimed by the next chunk. ``last`` returns the logits at the
+    chunk's final REAL row: once the prompt is exhausted this is the
+    sampling input for token 0 (:func:`make_chunk_admit`).
+
+    A prompt that fits one chunk runs the same program shape as monolithic
+    prefill; split prompts agree to reduction-order ulps (token streams are
+    asserted identical, the repo-wide cross-shape contract). Compiles once
+    per chunk bucket: O(log chunk_budget) programs.
+    """
+
+    def chunk(tree, row, last, tokens, start, clen):
+        logits, row = model.decode_step(tree, tokens, row, ctx)
+        new_last = jax.lax.dynamic_slice_in_dim(logits, clen - 1, 1, axis=1)
+        new_last = new_last[:, 0, :].astype(jnp.float32)
+        row = with_cache_positions(row, (start + clen)[None])
+        return row, new_last
+
+    return chunk
+
+
+def make_scan_chunk(model: ModelApi, ctx: EngineContext):
+    """Chunked prefill for recurrent-state families: the masked-scan prefill
+    over one chunk, with the (state, last-logits) carry crossing chunks.
+
+    Same signature as :func:`make_prefill_chunk`; ``start`` is unused (mixer
+    state carries no positional index) and steps past ``clen`` run but have
+    their state update masked out, so chunk bucketing composes with
+    recurrent state exactly as whole-prompt bucketing does.
+    """
+
+    def chunk(tree, row, last, tokens, start, clen):
+        def step(carry, xs):
+            row, last = carry
+            tok_i, i = xs
+            logits, new_row = model.decode_step(tree, tok_i[None, None], row, ctx)
+            valid = i < clen
+            row = jax.tree.map(lambda n, o: jnp.where(valid, n, o), new_row, row)
+            last = jnp.where(valid, logits[:, -1, :].astype(jnp.float32), last)
+            return (row, last), None
+
+        (row, last), _ = jax.lax.scan(
+            step, (row, last), (tokens[0], jnp.arange(tokens.shape[1]))
+        )
+        return row, last
+
+    return chunk
+
+
+def make_chunk_admit():
+    """Finalize a chunked prefill: sample token 0 from the accumulated last
+    logits, scatter the finished row cache into its slot, admit the slot
+    state — the shared :func:`_finish_prefill` tail as its own jitted
+    program. ``(cache, state, row, last, slot, base_key, temp, max_new) ->
+    (tok (1, 1), margin (1,), cache, state)``."""
+
+    def admit(cache, state, row, last, slot, base_key, temp, max_new):
+        return _finish_prefill(cache, state, row, last, slot, base_key, temp,
+                               max_new)
+
+    return admit
+
+
 def make_bucketed_prefill(model: ModelApi, ctx: EngineContext, max_len: int):
     """Whole-prompt prefill for attention/MLA families, scatter included.
 
@@ -458,6 +531,9 @@ ServingShardings` bundle (``partition.serving_sharding_report`` summarizes
         self._t0 = 0.0
         self._fault_counts = {"shed": 0, "expired": 0, "faulted": 0,
                               "deadline_misses": 0}
+        self._deadlines: Dict[int, Optional[float]] = {}
+        self._chunk_fns = None       # (chunk, admit) jits, frontend-only
+        self._frontend_meta = None   # set by the streaming frontend
         # mesh serving: derive every placement once from the logical-axis
         # rules and commit weights / cache / slot state to the mesh. With
         # mesh=None nothing below runs — that path stays byte-identical.
@@ -588,42 +664,28 @@ ServingShardings` bundle (``partition.serving_sharding_report`` summarizes
         partial streams for expired/faulted requests and omits shed ones.
         """
         res = self.resilience
-        scratch = self.spec.draft_len if self.spec is not None else 0
         shed_pre: List[Tuple[Request, str]] = []
         admitted: List[Request] = []
+        # deadlines resolve into RUN-LOCAL state, never onto the caller's
+        # Request objects: a list reused across servers (or runs) must not
+        # carry one run's resolved default_deadline_s into the next
+        deadlines = {req.rid: self._resolve_deadline(req) for req in requests}
         for req in requests:  # reject/shed before any state mutates
-            if (res is not None and res.default_deadline_s is not None
-                    and req.deadline_s is None):
-                req.deadline_s = res.default_deadline_s
-            prompt = np.asarray(req.prompt, np.int32)
-            too_long = len(prompt) + req.max_new + scratch > self.max_len
-            if res is None:  # legacy fail-stop contract, byte-identical
-                _checked_prompt(req)
-                if too_long:
-                    extra = (f" + draft_len ({scratch})"
-                             if self.spec is not None else "")
-                    why = (" — the verify forward needs draft_len rows of "
-                           "scratch headroom" if self.spec is not None else
-                           " — the KV cache would overflow mid-decode")
-                    raise ValueError(
-                        f"request {req.rid}: prompt ({len(prompt)}) + max_new "
-                        f"({req.max_new}){extra} exceeds max_len "
-                        f"({self.max_len}){why}"
-                    )
-            elif prompt.size == 0:
-                shed_pre.append((req, "empty_prompt"))
-                continue
-            elif too_long:
-                shed_pre.append((req, "too_long"))
+            reason = self._admission_error(req)
+            if reason is not None:
+                shed_pre.append((req, reason))
                 continue
             admitted.append(req)
         if res is not None and res.queue_limit is not None:
             from repro.resilience.outcome import shed_overflow
 
-            admitted, dropped = shed_overflow(admitted, res.queue_limit,
-                                              res.shed_policy)
+            admitted, dropped = shed_overflow(
+                admitted, res.queue_limit, res.shed_policy,
+                deadline_of=lambda r: deadlines[r.rid],
+            )
             shed_pre.extend((r, "queue_full") for r in dropped)
         self._begin_run(requests)
+        self._deadlines = deadlines
         obs = self.observer
         for req, reason in shed_pre:
             self._shed(req, reason)
@@ -644,23 +706,7 @@ ServingShardings` bundle (``partition.serving_sharding_report`` summarizes
                     if obs is not None:
                         obs.request_admitted(req.rid, slot)
                     self._prefill_slot(slot, req)
-                    if (res is not None and res.fault_isolation
-                            and not math.isfinite(req.margins[0])):
-                        # non-finite prefill logits: the sampled token is
-                        # garbage — quarantine before anything is committed
-                        # (the slot's rows are reclaimed by the next scatter)
-                        req.generated, req.margins = [], []
-                        results[req.rid] = req.generated
-                        self._finish(req, "faulted", reason="prefill_nonfinite")
-                        free.append(slot)
-                        continue
-                    if len(req.generated) >= req.max_new:  # prefill already done
-                        results[req.rid] = req.generated
-                        self._finish(req, "ok")
-                        free.append(slot)
-                        continue
-                    self.active[req.rid] = req
-                    slot_of[req.rid] = slot
+                    self._after_prefill(slot, req, results, slot_of, free)
                 if not self.active:
                     continue
                 queue_depth, free_slots = len(queue), len(free)
@@ -668,28 +714,7 @@ ServingShardings` bundle (``partition.serving_sharding_report`` summarizes
                     summary = self._spec_round(slot_of)
                 else:
                     summary = self._burst_round(slot_of)
-                for rid in summary["faulted"]:  # quarantine at the boundary
-                    req = self.active.pop(rid)
-                    results[rid] = req.generated
-                    self._finish(req, "faulted", reason=summary["fault_reason"])
-                    free.append(slot_of.pop(rid))
-                misses = 0
-                if res is not None:
-                    now = time.perf_counter() - self._t0
-                    for rid, req in list(self.active.items()):
-                        if req.deadline_s is not None and now >= req.deadline_s:
-                            self.active.pop(rid)
-                            results[rid] = req.generated
-                            self._finish(req, "expired", reason="deadline")
-                            free.append(slot_of.pop(rid))
-                            misses += 1
-                done = [r for r, q in self.active.items()
-                        if len(q.generated) >= q.max_new]
-                for rid in done:
-                    req = self.active.pop(rid)
-                    results[rid] = req.generated
-                    self._finish(req, "ok")
-                    free.append(slot_of.pop(rid))
+                misses = self._settle_round(summary, results, slot_of, free)
                 if self.controller is not None:
                     self._observe(summary["point"], summary["emitted"],
                                   summary["steps"], queue_depth, free_slots,
@@ -701,6 +726,107 @@ ServingShardings` bundle (``partition.serving_sharding_report`` summarizes
             self._end_run(aborted)
         return results
 
+    # -- per-round bookkeeping (shared by run() and the streaming frontend) ---
+
+    def _after_prefill(self, slot: int, req: Request, results: Dict,
+                       slot_of: Dict[int, int], free: List[int]) -> None:
+        """Post-prefill triage: quarantine a non-finite prefill, retire a
+        request whose budget the prefill token already satisfied, otherwise
+        activate the slot."""
+        res = self.resilience
+        if (res is not None and res.fault_isolation
+                and not math.isfinite(req.margins[0])):
+            # non-finite prefill logits: the sampled token is garbage —
+            # quarantine before anything is committed (the slot's rows are
+            # reclaimed by the next scatter)
+            req.generated, req.margins = [], []
+            results[req.rid] = req.generated
+            self._finish(req, "faulted", reason="prefill_nonfinite")
+            free.append(slot)
+            return
+        if len(req.generated) >= req.max_new:  # prefill already done
+            results[req.rid] = req.generated
+            self._finish(req, "ok")
+            free.append(slot)
+            return
+        self.active[req.rid] = req
+        slot_of[req.rid] = slot
+
+    def _settle_round(self, summary: Dict, results: Dict,
+                      slot_of: Dict[int, int], free: List[int]) -> int:
+        """After one burst/spec round: quarantine faulted lanes, evict
+        deadline misses, retire finished requests. Returns the number of
+        deadline misses (the controller signal)."""
+        res = self.resilience
+        for rid in summary["faulted"]:  # quarantine at the boundary
+            req = self.active.pop(rid)
+            results[rid] = req.generated
+            self._finish(req, "faulted", reason=summary["fault_reason"])
+            free.append(slot_of.pop(rid))
+        misses = 0
+        if res is not None:
+            now = time.perf_counter() - self._t0
+            for rid, req in list(self.active.items()):
+                d = self._deadline(req)
+                if d is not None and now >= d:
+                    self.active.pop(rid)
+                    results[rid] = req.generated
+                    self._finish(req, "expired", reason="deadline")
+                    free.append(slot_of.pop(rid))
+                    misses += 1
+        done = [r for r, q in self.active.items()
+                if len(q.generated) >= q.max_new]
+        for rid in done:
+            req = self.active.pop(rid)
+            results[rid] = req.generated
+            self._finish(req, "ok")
+            free.append(slot_of.pop(rid))
+        return misses
+
+    # -- admission: validation + run-local deadline resolution ----------------
+
+    def _admission_error(self, req: Request) -> Optional[str]:
+        """Validate one request at admission. Resilient servers get a
+        structured shed reason (or None when admissible); the legacy
+        ``resilience=None`` contract raises instead (byte-identical to the
+        original fail-stop path). Shared by ``run()`` and the streaming
+        frontend's ``submit``."""
+        scratch = self.spec.draft_len if self.spec is not None else 0
+        prompt = np.asarray(req.prompt, np.int32)
+        too_long = len(prompt) + req.max_new + scratch > self.max_len
+        if self.resilience is None:  # legacy fail-stop contract
+            _checked_prompt(req)
+            if too_long:
+                extra = (f" + draft_len ({scratch})"
+                         if self.spec is not None else "")
+                why = (" — the verify forward needs draft_len rows of "
+                       "scratch headroom" if self.spec is not None else
+                       " — the KV cache would overflow mid-decode")
+                raise ValueError(
+                    f"request {req.rid}: prompt ({len(prompt)}) + max_new "
+                    f"({req.max_new}){extra} exceeds max_len "
+                    f"({self.max_len}){why}"
+                )
+            return None
+        if prompt.size == 0:
+            return "empty_prompt"
+        if too_long:
+            return "too_long"
+        return None
+
+    def _resolve_deadline(self, req: Request) -> Optional[float]:
+        """The deadline this run enforces for ``req`` — its own, else the
+        resilience default. Pure: the Request is never written."""
+        if req.deadline_s is not None:
+            return req.deadline_s
+        res = self.resilience
+        return res.default_deadline_s if res is not None else None
+
+    def _deadline(self, req: Request) -> Optional[float]:
+        """Run-local resolved deadline (run-relative seconds); falls back to
+        the request's own field for rids this run never registered."""
+        return self._deadlines.get(req.rid, req.deadline_s)
+
     # -- resilience: outcome bookkeeping --------------------------------------
 
     def _finish(self, req: Request, status: str,
@@ -711,7 +837,7 @@ ServingShardings` bundle (``partition.serving_sharding_report`` summarizes
         tokens = len(req.generated or [])
         self.outcomes[req.rid] = RequestOutcome(
             rid=req.rid, status=status, reason=reason, tokens=tokens,
-            deadline_s=req.deadline_s,
+            deadline_s=self._deadline(req),
             wall_s=time.perf_counter() - self._t0,
         )
         obs = self.observer
@@ -723,6 +849,13 @@ ServingShardings` bundle (``partition.serving_sharding_report`` summarizes
             self._fault_counts["deadline_misses"] += 1
             if obs is not None:
                 obs.request_expired(req.rid, tokens)
+        elif status == "aborted":
+            # streaming-frontend cancellation (client disconnect); the batch
+            # run() path never produces this status itself
+            self._fault_counts["aborted"] = (
+                self._fault_counts.get("aborted", 0) + 1)
+            if obs is not None:
+                obs.request_cancelled(req.rid, tokens)
         else:
             self._fault_counts["faulted"] += 1
             if obs is not None:
@@ -734,7 +867,7 @@ ServingShardings` bundle (``partition.serving_sharding_report`` summarizes
 
         self.outcomes[req.rid] = RequestOutcome(
             rid=req.rid, status="shed", reason=reason, tokens=0,
-            deadline_s=req.deadline_s,
+            deadline_s=self._deadline(req),
             wall_s=time.perf_counter() - self._t0,
         )
         self._fault_counts["shed"] += 1
@@ -747,7 +880,8 @@ ServingShardings` bundle (``partition.serving_sharding_report`` summarizes
         now = time.perf_counter() - self._t0
         kept, n_shed = [], 0
         for req in queue:
-            if req.deadline_s is not None and now >= req.deadline_s:
+            d = self._deadline(req)
+            if d is not None and now >= d:
                 self._shed(req, "deadline_expired")
                 n_shed += 1
             else:
@@ -770,6 +904,7 @@ ServingShardings` bundle (``partition.serving_sharding_report`` summarizes
         self._t0 = time.perf_counter()
         self._fault_counts = {"shed": 0, "expired": 0, "faulted": 0,
                               "deadline_misses": 0}
+        self._deadlines = {}  # rid -> resolved run-relative deadline
         self._run_requests = list(requests)
         if self.telemetry is not None:
             self.telemetry.reset()
@@ -802,7 +937,7 @@ ServingShardings` bundle (``partition.serving_sharding_report`` summarizes
                     self.outcomes[req.rid] = RequestOutcome(
                         rid=req.rid, status="aborted",
                         tokens=len(req.generated or []),
-                        deadline_s=req.deadline_s, wall_s=wall,
+                        deadline_s=self._deadline(req), wall_s=wall,
                     )
         if self.observer is not None:
             self.observer.run_end(aborted, self.host_transfers,
@@ -830,6 +965,8 @@ ServingShardings` bundle (``partition.serving_sharding_report`` summarizes
                 "fault_isolation": self.resilience.fault_isolation,
                 "default_deadline_s": self.resilience.default_deadline_s,
             }
+        if self._frontend_meta is not None:
+            meta["frontend"] = dict(self._frontend_meta)
         if self.shardings is not None:
             meta["sharding"] = partition.serving_sharding_report(self.shardings)
         engine = self._engine_cost_meta()
@@ -955,6 +1092,36 @@ ServingShardings` bundle (``partition.serving_sharding_report`` summarizes
         stack.enter_context(jax.threefry_partitionable(True))
         stack.enter_context(self.mesh)
         return stack
+
+    def chunk_fns(self):
+        """The jitted chunked-prefill programs ``(chunk, admit)`` — the
+        streaming frontend's prefill hot path. Built lazily so batch-only
+        servers never trace them; ``run()`` itself never calls these.
+        ``chunk`` advances a request's private row cache by one padded chunk
+        (row + last-logits donated); ``admit`` is the shared
+        :func:`_finish_prefill` tail (cache/state/row donated)."""
+        if self._chunk_fns is None:
+            factory = (make_prefill_chunk if self.batched_prefill
+                       else make_scan_chunk)
+            if self.mesh is not None:
+                raise ValueError(
+                    "chunked prefill is single-device for now: the streaming "
+                    "frontend rejects mesh= (ROADMAP: sharded streaming)"
+                )
+            self._chunk_fns = (
+                jax.jit(factory(self.model, self.ctx), donate_argnums=(1, 2)),
+                # the row is an input-only buffer here (scattered into the
+                # slot cache, never returned) — donating it would just warn
+                jax.jit(make_chunk_admit(), donate_argnums=(0, 1)),
+            )
+        return self._chunk_fns
+
+    def fresh_row(self):
+        """A fresh single-request prefill carry: a private ``(1, max_len)``
+        row cache (write index 0) and a zeroed last-logits buffer."""
+        row = self.model.make_cache(1, self.max_len, dtype=jnp.float32)
+        last = jnp.zeros((1, self.model.cfg.vocab_size), jnp.float32)
+        return row, last
 
     def decode_burst(self, sampled: bool = True):
         """The jitted burst step (``sampled=False``: the all-greedy variant)."""

@@ -6,6 +6,9 @@ memory) and schedules every recorded span onto an :class:`ArrayConfig`:
 * **prefill spans** — one pass of the whole weight bank at the span's
   execution point for the padded bucket's positions (the engine pads
   prompts to pow2 buckets; the array pays for the padding, so does the sim).
+  Streaming-frontend traces carry ``prefill_chunk`` spans instead (one pass
+  per chunk bucket; only the final chunk syncs the host) — both vocabularies
+  replay, and ``admission_tick`` instants are counted.
 * **burst spans** — ``steps`` bank passes with ``slots`` activation rows
   each (the burst scan computes every slot row every step, drained or not —
   the sim charges what the engine executes, not what it emits).
@@ -143,8 +146,9 @@ class _Replayer:
         self.points: Dict[str, Dict] = {}
         self.layers: Dict[str, float] = {}
         self.requests: Dict[str, Dict] = {}
-        self.counts = {"prefills": 0, "bursts": 0, "spec_rounds": 0,
-                       "switches": 0, "tokens": 0}
+        self.counts = {"prefills": 0, "prefill_chunks": 0, "bursts": 0,
+                       "spec_rounds": 0, "switches": 0, "tokens": 0,
+                       "admission_ticks": 0}
         self.breakdown = CostBreakdown()
         self.host_cycles = 0.0
         self.switch_cycles = 0.0
@@ -231,6 +235,23 @@ class _Replayer:
             # unpadded length the telemetry charged
             self._prefill_point[str(merged.get("rid"))] = point
             self.host_cycles += self.cfg.host_sync_cycles
+        elif name == "prefill_chunk":
+            # chunked (streaming-frontend) prefill: one bank pass per chunk
+            # at the chunk's padded bucket; only the FINAL chunk runs the
+            # admit program and syncs the host, so only it counts as a
+            # completed prefill / pays host_sync. The request_prefilled
+            # instant that follows the final chunk carries the savings
+            # charge, same as the monolithic span.
+            point = self.bank.resolve(merged.get("point"))
+            bucket = int(merged.get("bucket", 1))
+            final = bool(merged.get("final"))
+            self.counts["prefill_chunks"] += 1
+            self._charge("prefill", point, bucket, 1, wall_s=wall,
+                         tokens=1 if final else 0, rid=merged.get("rid"))
+            if final:
+                self.counts["prefills"] += 1
+                self._prefill_point[str(merged.get("rid"))] = point
+                self.host_cycles += self.cfg.host_sync_cycles
         elif name == "burst":
             point = self.bank.resolve(merged.get("point"))
             steps = int(merged.get("steps", 0))
@@ -288,6 +309,8 @@ class _Replayer:
                 + self.cfg.switch_cycles
         elif name == "request_submitted":
             self._req_acc(args.get("rid"))["prompt_len"] = args.get("prompt_len")
+        elif name == "admission_tick":
+            self.counts["admission_ticks"] += 1
 
     # -- result ---------------------------------------------------------------
 

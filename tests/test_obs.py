@@ -376,6 +376,27 @@ def test_jsonl_export_roundtrips_run(observed_run, tmp_path):
     assert len(events) == len(server.observer.trace.events)
 
 
+def test_shed_requests_contribute_queue_wait(olmo):
+    """queue_wait_s is submission -> leaving the queue, by admission OR by
+    shed: a request shed for queue overflow still waited, and dropping its
+    sample would optimistically bias the tail exactly when shedding is
+    heaviest. Every offered request lands exactly one queue_wait sample."""
+    from repro.resilience import ResilienceConfig
+
+    cfg, model, params = olmo
+    server = BatchedServer(
+        model, EXACT, params, slots=1, max_len=32, burst=4,
+        resilience=ResilienceConfig(queue_limit=2))
+    server.observer = ServingObserver(trace=False)
+    out = server.run(_requests(cfg, 5))
+    shed = [o for o in server.outcomes.values() if o.status == "shed"]
+    assert len(shed) == 3 and len(out) == 2
+    hists = server.observer.snapshot()["metrics"]["histograms"]
+    assert hists["queue_wait_s"]["count"] == 5  # 2 admitted + 3 shed
+    counters = server.observer.snapshot()["metrics"]["counters"]
+    assert counters["shed"] == 3 and counters["requests"] == 5
+
+
 # ---------------------------------------------------------------------------
 # run reuse + aborted runs: reset and export must be symmetric
 # ---------------------------------------------------------------------------

@@ -329,6 +329,30 @@ def test_per_request_deadline_overrides_default(olmo):
     assert srv.outcomes[1].deadline_s == 0.001
 
 
+def test_run_never_mutates_caller_requests(olmo):
+    """Deadline resolution is run-local state, not a write onto the caller's
+    Request objects: the SAME request list served by two servers with
+    different default deadlines must leave ``req.deadline_s`` untouched and
+    give each run its own server's default (the old code stamped the first
+    server's default onto the requests, so the second run inherited it)."""
+    cfg, model, params = olmo
+    reqs = _requests(cfg, 2, max_new=4)  # deadline_s=None on every request
+    generous = BatchedServer(
+        model, CARMEN, params, slots=2, max_len=64, burst=4,
+        resilience=ResilienceConfig(default_deadline_s=120.0))
+    generous.run(reqs)
+    assert all(r.deadline_s is None for r in reqs)
+    assert all(o.deadline_s == 120.0 for o in generous.outcomes.values())
+
+    tight = BatchedServer(
+        model, CARMEN, params, slots=2, max_len=64, burst=4,
+        resilience=ResilienceConfig(default_deadline_s=0.002))
+    tight.run(reqs)
+    assert all(r.deadline_s is None for r in reqs)
+    # the second run resolved ITS default, not the first server's 120 s
+    assert all(o.deadline_s == 0.002 for o in tight.outcomes.values())
+
+
 # ---------------------------------------------------------------------------
 # outcomes and aborted-run attribution
 # ---------------------------------------------------------------------------

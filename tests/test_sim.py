@@ -493,3 +493,88 @@ def test_check_trend_normalizes_machine_speed():
     paths = dict(collect_tok_s(baseline))
     assert set(paths) == {"configs.x.tok_s", "configs.y.tok_s",
                           "configs.z.sweep[0].tok_s"}
+
+
+def test_check_trend_new_paths_helper():
+    from benchmarks.check_trend import new_paths
+
+    baseline = {"configs": {"x": {"tok_s": 100.0}}}
+    fresh = {"configs": {"x": {"tok_s": 99.0},
+                         "y": {"tok_s": 50.0},
+                         "z": {"sweep": [{"tok_s": 10.0}]}}}
+    assert set(new_paths(fresh, baseline)) == {
+        "configs.y.tok_s", "configs.z.sweep[0].tok_s"}
+    assert new_paths(baseline, fresh) == []
+
+
+def test_check_trend_skips_new_bench_with_notice(tmp_path, capsys):
+    """A fresh BENCH file with no committed baseline (the state every PR
+    landing a new benchmark creates) must neither crash nor silently pass:
+    check_trend exits 0 with an explicit NOTICE + skip tally."""
+    from benchmarks.check_trend import main as trend_main
+
+    bench = tmp_path / "BENCH_brand_new_subsystem.json"
+    bench.write_text(json.dumps({"configs": {"a": {"tok_s": 123.0}}}))
+    trend_main(["--dir", str(tmp_path)])  # must not sys.exit(1)
+    out = capsys.readouterr().out
+    assert "NOTICE" in out and "no committed baseline" in out
+    assert "1 file(s) skipped with notice" in out
+    assert "0 file(s) gated" in out
+
+
+def test_check_trend_git_failure_is_notice(tmp_path, capsys, monkeypatch):
+    """git itself failing to run (no git on PATH, not a repo) is
+    skip-with-notice, never a crash."""
+    import benchmarks.check_trend as ct
+
+    def boom(*a, **kw):
+        raise OSError("no git binary")
+
+    monkeypatch.setattr(ct.subprocess, "run", boom)
+    bench = tmp_path / "BENCH_whatever.json"
+    bench.write_text(json.dumps({"configs": {"a": {"tok_s": 1.0}}}))
+    ct.main(["--dir", str(tmp_path)])
+    out = capsys.readouterr().out
+    assert "could not run" in out and "skipped with notice" in out
+
+
+def test_replay_accepts_chunked_frontend_trace(tmp_path):
+    """Traces recorded through the continuous-batching frontend use the
+    prefill_chunk / admission_tick vocabulary instead of monolithic prefill
+    spans; replay must price them (one multi-position pass per chunk, the
+    final chunk carrying the per-request attribution and host-sync charge)
+    alongside the batch vocabulary — the docs/trace-schema.md v1
+    compatibility note, pinned."""
+    from repro.serve.frontend import ContinuousScheduler, FrontendConfig
+
+    cfg, model, params = _setup()
+    ctx = EngineContext(mode="carmen", policy=PrecisionPolicy.accurate(FXP8),
+                        compute_dtype=jnp.float32)
+    bank = build_bank(params, "carmen", default_points(FXP8, hifi_fmt=None),
+                      specs=model.specs())
+    server = BatchedServer(
+        model, ctx, params, slots=2, max_len=24, burst=4,
+        controller=ModeController(bank, ControllerConfig(pin=bank.reference)))
+    server.observer = ServingObserver(trace=True)
+    reqs = _requests(cfg, 3, max_new=8)
+    sched = ContinuousScheduler(server, FrontendConfig(chunk_tokens=2))
+    with sched:
+        for r in reqs:
+            sched.submit(r)
+        out = sched.drain()
+
+    path = str(tmp_path / "frontend.jsonl")
+    server.observer.trace.write_jsonl(path)
+    result = replay_trace(path)
+    header, _ = read_trace(path)
+    assert header["run"]["frontend"] == {"chunk_tokens": 2,
+                                         "monolithic_prefill": False}
+    assert result.counts["prefill_chunks"] > 3  # prompts really chunked
+    assert result.counts["prefills"] == 3  # one admit (final chunk) each
+    assert result.counts["admission_ticks"] > 0
+    assert set(result.requests) == {str(r.rid) for r in reqs}
+    for rid, generated in out.items():
+        assert result.requests[str(rid)]["tokens"] == len(generated)
+    assert result.phases.get("prefill", 0) > 0
+    assert sum(result.phases.values()) == pytest.approx(
+        result.totals["total_cycles"])
